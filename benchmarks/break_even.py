@@ -1,0 +1,100 @@
+"""Beyond-paper analysis: where is the SNN/CNN break-even on TPU?
+
+The paper's question re-asked on TPU hardware. For a layer of given size we
+compare the energy of (a) the dense int8 MXU path and (b) the event-driven
+path at varying event rates (fraction of neurons spiking per step x T steps),
+and report the *break-even event rate*: below it, spiking wins.
+
+E_dense(layer)  = MACs * E_INT8_MAC + bytes * mem
+E_event(layer)  = rate * T * N_in * K^2 * C_out * (E_FP32_ADD
+                  + 2 * mem_bytes * E_VMEM) + queue traffic
+
+Because the MXU makes MACs ~50x cheaper than VMEM round-trips, the TPU
+break-even sits at ~0.3-1% event rate — far below what m-TTFS conversion
+produces (20-60%) — while on the paper's FPGA (MAC ~= several LUT-adds,
+BRAM-dominated) the same arithmetic favors SNNs by SVHN scale. Both readings
+come from the same model with different constants — the quantitative form of
+the paper's "to spike or not to spike" answer being hardware-dependent.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.energy import (E_FP32_ADD, E_HBM_BYTE, E_INT8_MAC,
+                               E_VMEM_BYTE)
+
+from .common import emit
+
+
+def _dense_pj(hw: int, c_in: int, c_out: int, K: int = 3,
+              w_bits: int = 8) -> float:
+    macs = hw * hw * K * K * c_in * c_out
+    weight_bytes = K * K * c_in * c_out * w_bits / 8
+    act_bytes = hw * hw * (c_in + c_out)
+    return macs * E_INT8_MAC + weight_bytes * E_HBM_BYTE + \
+        act_bytes * 2 * E_VMEM_BYTE
+
+
+def _event_pj(hw: int, c_in: int, c_out: int, rate: float, T: int = 4,
+              K: int = 3, word_bytes: int = 1) -> float:
+    events = rate * T * hw * hw * c_in
+    adds = events * K * K * c_out
+    queue = events * word_bytes * 2
+    membrane = adds * 4 * 2  # read+write a 4-byte potential per add
+    return adds * E_FP32_ADD + (queue + membrane) * E_VMEM_BYTE
+
+
+def break_even_curve():
+    """Break-even event rate per layer geometry (binary search)."""
+    for hw, c_in, c_out, tag in [
+        (28, 1, 32, "mnist_l0"), (28, 32, 32, "mnist_l1"),
+        (32, 64, 64, "svhn_mid"), (32, 128, 128, "cifar_deep"),
+        (64, 256, 256, "beyond_paper_scale"),
+    ]:
+        dense = _dense_pj(hw, c_in, c_out)
+        lo, hi = 0.0, 1.0
+        for _ in range(40):
+            mid = (lo + hi) / 2
+            if _event_pj(hw, c_in, c_out, mid) < dense:
+                lo = mid
+            else:
+                hi = mid
+        emit(f"break_even/{tag}", 0.0,
+             f"dense_pJ={dense:.3g};break_even_rate={lo:.4f};"
+             f"mttfs_typical_rate=0.2-0.6;spiking_wins_on_tpu={lo > 0.2}")
+
+
+def fpga_constants_check():
+    """Same break-even search with FPGA-flavored constants (MAC ~ 5 adds,
+    BRAM-dominated memory, no MXU). The paper's empirical signature is that
+    per-sample SNN cost *straddles* the CNN constant (histograms cross the
+    red line, Figs. 12-14) — i.e. the FPGA break-even rate falls INSIDE the
+    typical m-TTFS activity band (0.2-0.6), while the TPU's falls far below
+    it. Same model, different constants, both hardware answers."""
+    e_mac_fpga = 5 * E_FP32_ADD          # LUT-built MAC vs bare adder
+    e_mem_fpga = 2.0                     # BRAM pJ/B (order of magnitude)
+
+    def dense_pj(hw, c_in, c_out):
+        macs = hw * hw * 9 * c_in * c_out
+        return macs * e_mac_fpga + macs * 0.5 * e_mem_fpga
+
+    def event_pj(hw, c_in, c_out, rate):
+        adds = rate * 4 * hw * hw * c_in * 9 * c_out
+        return adds * E_FP32_ADD + adds * 8 * e_mem_fpga * 0.25
+
+    for hw, c_in, c_out, tag in [(28, 32, 32, "mnist_l1"),
+                                 (32, 128, 128, "cifar_deep")]:
+        dense = dense_pj(hw, c_in, c_out)
+        lo, hi = 0.0, 1.0
+        for _ in range(40):
+            mid = (lo + hi) / 2
+            if event_pj(hw, c_in, c_out, mid) < dense:
+                lo = mid
+            else:
+                hi = mid
+        emit(f"break_even_fpga/{tag}", 0.0,
+             f"dense_pJ={dense:.3g};break_even_rate={lo:.3f};"
+             f"inside_mttfs_band={0.2 <= lo <= 0.6}")
+
+
+ALL = [break_even_curve, fpga_constants_check]

@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: CNN training cache + timing."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time per call in microseconds (jit-compiled callables)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def trained_cnn(dataset: str, *, epochs: int = 6, n_train: int = 2048,
+                lr: float = 2e-3):
+    """Train (or load the cached) paper-spec CNN for a dataset."""
+    from repro.configs import PAPER_SPECS
+    from repro.core import cnn_baseline, snn_model
+    from repro.data.synthetic import DATASETS
+
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"{dataset}_cnn.pkl")
+    spec = PAPER_SPECS[dataset]["spec"]
+    imgs, labels = DATASETS[dataset](n_train, seed=1)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            params = [
+                {k: jnp.asarray(v) for k, v in layer.items()}
+                for layer in pickle.load(f)]
+        return spec, params, imgs
+
+    hw, c = imgs.shape[1], imgs.shape[-1]
+    params = snn_model.init_params(jax.random.PRNGKey(0), spec, hw, c)
+    init_opt, step = cnn_baseline.make_train_step(spec, weight_bits=8,
+                                                  act_bits=8, lr=lr)
+    opt = init_opt(params)
+    for epoch in range(epochs):
+        perm = np.random.default_rng(epoch).permutation(len(imgs))
+        for i in range(0, len(imgs), 128):
+            idx = perm[i : i + 128]
+            params, opt, _ = step(params, opt, {
+                "image": jnp.asarray(imgs[idx]),
+                "label": jnp.asarray(labels[idx])})
+    with open(path, "wb") as f:
+        pickle.dump([{k: np.asarray(v) for k, v in layer.items()}
+                     for layer in params], f)
+    return spec, params, imgs
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,80 @@
+"""Per-input distribution benchmarks (paper Figs. 7, 8, 9, 12-15).
+
+The paper's methodological signature: SNN latency/energy are *distributions*
+over inputs (histograms), the CNN's a constant (red line). We emit range +
+decile summaries as CSV (the histogram data, textual)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comparison import run_study
+from repro.data.synthetic import DATASETS
+
+from .common import emit, trained_cnn
+
+
+def _deciles(a):
+    qs = np.percentile(a, [0, 10, 25, 50, 75, 90, 100])
+    return "|".join(f"{q:.3g}" for q in qs)
+
+
+def fig7_latency_histograms():
+    """SNN latency distribution vs CNN constant, MNIST (Fig. 7)."""
+    spec, params, imgs = trained_cnn("mnist")
+    test_imgs, test_labels = DATASETS["mnist"](128, seed=99)
+    res = run_study(params, spec, "mnist",
+                    jnp.asarray(test_imgs), jnp.asarray(test_labels),
+                    jnp.asarray(imgs[:128]), T=4, depth=64, balance=False)
+    emit("fig7/snn_latency_deciles_s", 0.0, _deciles(res.snn_latency_s))
+    emit("fig7/cnn_latency_s", 0.0, f"{res.cnn_latency_s:.3g}")
+    emit("fig7/snn_faster_fraction", 0.0,
+         f"{float((res.snn_latency_s < res.cnn_latency_s).mean()):.3f}")
+
+
+def fig8_spikes_per_class():
+    """Average spikes per inference per class (Fig. 8 — digit 1 outlier)."""
+    spec, params, imgs = trained_cnn("mnist")
+    test_imgs, test_labels = DATASETS["mnist"](200, seed=99)
+    res = run_study(params, spec, "mnist",
+                    jnp.asarray(test_imgs), jnp.asarray(test_labels),
+                    jnp.asarray(imgs[:128]), T=4, depth=64, balance=False)
+    derived = ";".join(f"c{k}={v:.0f}" for k, v in
+                       sorted(res.per_class_spikes.items()))
+    outlier = min(res.per_class_spikes, key=res.per_class_spikes.get)
+    emit("fig8/spikes_per_class", 0.0, derived + f";outlier=c{outlier}")
+
+
+def fig9_12_energy_distributions():
+    """Energy + FPS/W distributions vs CNN (Figs. 9/12)."""
+    spec, params, imgs = trained_cnn("mnist")
+    test_imgs, test_labels = DATASETS["mnist"](128, seed=99)
+    res = run_study(params, spec, "mnist",
+                    jnp.asarray(test_imgs), jnp.asarray(test_labels),
+                    jnp.asarray(imgs[:128]), T=4, depth=64, balance=False)
+    emit("fig9/snn_energy_deciles_J", 0.0, _deciles(res.snn_energy_j))
+    emit("fig9/cnn_energy_J", 0.0, f"{res.cnn_energy_j:.3g}")
+    emit("fig12/snn_fpsw_deciles", 0.0, _deciles(res.snn_fps_per_w))
+    emit("fig12/cnn_fpsw", 0.0, f"{res.cnn_fps_per_w:.0f}")
+
+
+def fig13_15_larger_datasets():
+    """SVHN / CIFAR-10 latency+energy distributions (Figs. 13-15) — where
+    the paper finds the trend reverses in the SNN's favor."""
+    for ds, figname in (("svhn", "fig13"), ("cifar10", "fig14")):
+        spec, params, imgs = trained_cnn(ds, epochs=8)
+        test_imgs, test_labels = DATASETS[ds](96, seed=99)
+        res = run_study(params, spec, ds,
+                        jnp.asarray(test_imgs), jnp.asarray(test_labels),
+                        jnp.asarray(imgs[:128]), T=4, depth=64, balance=False)
+        emit(f"{figname}/{ds}_snn_energy_deciles_J", 0.0,
+             _deciles(res.snn_energy_j))
+        emit(f"{figname}/{ds}_cnn_energy_J", 0.0, f"{res.cnn_energy_j:.3g}")
+        emit(f"fig15/{ds}_snn_latency_deciles_s", 0.0,
+             _deciles(res.snn_latency_s))
+        emit(f"fig15/{ds}_snn_beats_cnn_energy_fraction", 0.0,
+             f"{float((res.snn_energy_j < res.cnn_energy_j).mean()):.3f}")
+
+
+ALL = [fig7_latency_histograms, fig8_spikes_per_class,
+       fig9_12_energy_distributions, fig13_15_larger_datasets]

@@ -1,0 +1,86 @@
+"""Pallas kernel microbenchmarks.
+
+CPU wall times are interpret-mode numbers (the kernel body in Python) — they
+validate logic, not TPU speed; the derived column carries the structural
+metrics that matter for the TPU roofline: events/step, adds/event, bytes
+moved per event word.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aeq, encoding
+from repro.kernels import ops, ref
+
+from .common import emit, timed
+
+
+def event_accum_bench():
+    fmt = encoding.make_format(28, 3)
+    rng = np.random.default_rng(0)
+    raster = (rng.random((1, 4, 28, 28)) < 0.15).astype(np.float32)
+    q = aeq.aeq_from_raster(fmt, jnp.asarray(raster), 64)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 32)), jnp.float32)
+    vm = jnp.zeros((28, 28, 32), jnp.float32)
+    kw = dict(K=3, n_win=fmt.n_win, bits=fmt.bits_coord)
+
+    us_ref = timed(lambda: ops.event_accum(
+        q.words[0], q.counts[0], w, vm, backend="ref", **kw))
+    n_ev = int(q.counts[0].sum())
+    emit("kernel/event_accum_ref", us_ref,
+         f"events={n_ev};adds_per_event={9 * 32};"
+         f"phase_parallel=9;lanes=32")
+
+    # interpret-mode Pallas timing on a reduced tile (the Python-loop
+    # interpreter is ~10^4x slower than the lowered kernel; logic-only)
+    fmt_s = encoding.make_format(12, 3)
+    raster_s = (rng.random((1, 2, 12, 12)) < 0.15).astype(np.float32)
+    q_s = aeq.aeq_from_raster(fmt_s, jnp.asarray(raster_s), 16)
+    w_s = jnp.asarray(rng.normal(size=(3, 3, 2, 8)), jnp.float32)
+    vm_s = jnp.zeros((12, 12, 8), jnp.float32)
+    kw_s = dict(K=3, n_win=fmt_s.n_win, bits=fmt_s.bits_coord)
+    us_k = timed(lambda: ops.event_accum(q_s.words[0], q_s.counts[0],
+                                         w_s, vm_s, **kw_s),
+                 repeats=1, warmup=1)
+    emit("kernel/event_accum_pallas_interp", us_k,
+         f"events={int(q_s.counts[0].sum())};"
+         f"vmem_tile_bytes={12 * 12 * 8 * 4}")
+
+
+def spike_compact_bench():
+    fmt = encoding.make_format(28, 3)
+    rng = np.random.default_rng(1)
+    occ = (rng.random((32, fmt.n_win ** 2)) < 0.25).astype(np.int32)
+    kw = dict(n_win=fmt.n_win, bits=fmt.bits_coord, depth=64,
+              invalid=fmt.invalid_word)
+    us = timed(lambda: ops.spike_compact(jnp.asarray(occ), backend="ref", **kw))
+    emit("kernel/spike_compact_ref", us,
+         f"rows={occ.shape[0]};events={int(occ.sum())};word_bits={fmt.word_bits}")
+
+
+def quant_matmul_bench():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-127, 127, (256, 256)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 127, (256, 256)), jnp.int8)
+    s = jnp.float32(0.01)
+    us_ref = timed(lambda: ops.quant_matmul(a, b, s, s, backend="ref"))
+    macs = 256 ** 3
+    emit("kernel/quant_matmul_ref", us_ref,
+         f"macs={macs};mxu_blocks=128x128x128;"
+         f"tput_gmacs={macs / us_ref / 1e3:.2f}")
+
+
+def moe_gather_bench():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1024, 128)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, 1024, 512), jnp.int32)
+    us = timed(lambda: ops.moe_gather(x, idx, backend="ref"))
+    emit("kernel/moe_gather_ref", us,
+         f"slots=512;routing_word_bytes=4;"
+         f"struct_bytes_saved={512 * 12}")
+
+
+ALL = [event_accum_bench, spike_compact_bench, quant_matmul_bench,
+       moe_gather_bench]

@@ -1,0 +1,68 @@
+"""Memory-organization study (paper Fig. 10/11, Sec. 5.1) — TPU re-target.
+
+The paper sweeps BRAM vs LUTRAM energy against word width w and depth D. The
+TPU analogue sweeps the event-word width and state residency (HBM vs VMEM)
+through the energy model, and reports the same crossover structure: shallow/
+narrow state does not amortize the heavyweight memory (BRAM <-> HBM), so it
+should live in the lightweight one (LUTRAM <-> VMEM).
+
+Also reports the paper's own #BRAM model on the same sweep for comparison.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fpga_model
+from repro.core.energy import E_HBM_BYTE, E_VMEM_BYTE
+from repro.core.snn_model import SNNStats
+from repro.core.energy import snn_energy
+
+from .common import emit
+
+
+def fig11_residency_sweep():
+    """Energy vs word width w for HBM- vs VMEM-resident queues (Fig. 11)."""
+    n_events = 20_000
+    stats = SNNStats(
+        events_in=jnp.asarray([[n_events]]),
+        spikes_out=jnp.asarray([[n_events // 3]]),
+        add_ops=jnp.asarray([[n_events * 9 * 32]]),
+        overflow=jnp.zeros((), jnp.int32),
+        queue_words=jnp.asarray([[n_events]]),
+    )
+    for wb in (1, 2, 4):
+        e_hbm = float(snn_energy(stats, word_bytes=wb,
+                                 vmem_resident=False).total_pj[0])
+        e_vmem = float(snn_energy(stats, word_bytes=wb,
+                                  vmem_resident=True).total_pj[0])
+        emit(f"fig11/word_{wb}B", 0.0,
+             f"hbm_pJ={e_hbm:.4g};vmem_pJ={e_vmem:.4g};"
+             f"ratio={e_hbm / e_vmem:.2f}")
+
+
+def fig10_bram_depth_sweep():
+    """The paper's D=8192 vs D=256 BRAM-occupancy finding (Fig. 10/11b)."""
+    for D in (8192, 256):
+        for w in (1, 4, 8, 16, 36):
+            occ = fpga_model.bram_occupancy(D, w)
+            n = fpga_model.n_bram(1, 1, D, w)
+            emit(f"fig10/D{D}_w{w}", 0.0,
+                 f"brams={n};occupancy={occ:.3f}")
+
+
+def compressed_encoding_traffic():
+    """Sec. 5.2 headline: compressed AE words cut queue bytes 20%->60%."""
+    from repro.core import encoding
+
+    for width in (28, 10, 32):
+        f_c = encoding.make_format(width, 3, compressed=True)
+        f_u = encoding.make_format(width, 3, compressed=False)
+        emit(f"compr/W{width}", 0.0,
+             f"compressed_bits={f_c.word_bits};original_bits={f_u.word_bits};"
+             f"bytes={encoding.word_nbytes(f_c)}v{encoding.word_nbytes(f_u)};"
+             f"traffic_saving={1 - f_c.word_bits / f_u.word_bits:.2f}")
+
+
+ALL = [fig11_residency_sweep, fig10_bram_depth_sweep,
+       compressed_encoding_traffic]

@@ -1,0 +1,48 @@
+"""Roofline summary from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Reads experiments/dryrun/<mesh>/*.json (produced by launch/dryrun.py) and
+emits one CSV row per (arch x shape): the three terms, the bottleneck, and
+MODEL_FLOPS / HLO_FLOPs (useful-compute ratio).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def roofline_rows(mesh: str = "16x16"):
+    root = os.path.join("experiments", "dryrun", mesh)
+    files = sorted(
+        p for p in glob.glob(os.path.join(root, "*.json"))
+        if "__hc_" not in p and "__unrolled" not in p  # §Perf variants
+    )
+    if not files:
+        emit(f"roofline/{mesh}", 0.0, "missing=run launch/dryrun.py first")
+        return
+    for path in files:
+        rec = json.load(open(path))
+        cell = f"{rec['arch']}__{rec['shape']}"
+        if "skipped" in rec:
+            emit(f"roofline/{mesh}/{cell}", 0.0, "skipped=policy")
+            continue
+        if "error" in rec:
+            emit(f"roofline/{mesh}/{cell}", 0.0,
+                 f"error={rec['error'].splitlines()[0][:60]}")
+            continue
+        t = rec["roofline_terms_s"]
+        ratio = rec.get("useful_flops_ratio")
+        emit(f"roofline/{mesh}/{cell}", rec["compile_s"] * 1e6,
+             f"compute_s={t['compute_s']:.3e};memory_s={t['memory_s']:.3e};"
+             f"collective_s={t['collective_s']:.3e};"
+             f"bottleneck={rec['bottleneck'].replace('_s', '')};"
+             f"useful_flops_ratio={ratio:.3f}" if ratio else "n/a")
+
+
+def roofline_multi_pod():
+    roofline_rows("2x16x16")
+
+
+ALL = [roofline_rows, roofline_multi_pod]

@@ -1,0 +1,44 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableX|figY|kernel|roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows. Timing columns are CPU wall
+times (interpret-mode for Pallas kernels); `derived` carries the model
+metrics (energy, FPS/W, roofline terms) that constitute the reproduction.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="substring filter on benchmark function names")
+    args = ap.parse_args()
+
+    from . import break_even, distributions, kernel_bench, memory_study, \
+        paper_tables, roofline_report
+
+    suites = (paper_tables.ALL + distributions.ALL + memory_study.ALL +
+              kernel_bench.ALL + break_even.ALL + roofline_report.ALL)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in suites:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — record, keep the suite going
+            failures += 1
+            print(f"{fn.__name__},0.0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

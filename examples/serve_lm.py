@@ -1,0 +1,48 @@
+"""Batched LM serving with continuous batching.
+
+Serves a small decoder-only model through the fixed-slot engine: requests of
+different prompt lengths arrive, are admitted into free slots (prefill into
+the slot), and all live slots decode one token per engine step — the
+static-shape, TPU-friendly serving pattern. Prints throughput + per-request
+outputs.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.serving.serve import Request, ServeEngine
+
+
+def main():
+    cfg = configs.get_smoke("gemma-7b")
+    params, _ = M.init_model(jax.random.PRNGKey(7), cfg)
+    engine = ServeEngine(params, cfg, slots=4, max_seq=96)
+
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(10):
+        prompt = rng.integers(0, cfg.vocab, int(rng.integers(2, 12))).tolist()
+        r = Request(rid=i, prompt=prompt, max_tokens=int(rng.integers(4, 16)))
+        reqs.append(r)
+        engine.submit(r)
+
+    t0 = time.time()
+    engine.run_to_completion()
+    dt = time.time() - t0
+
+    total = sum(len(r.out) for r in reqs)
+    print(f"served {len(reqs)} requests / {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, slots=4, continuous batching)")
+    for r in reqs[:5]:
+        print(f"  req {r.rid}: len(prompt)={len(r.prompt)} "
+              f"-> {len(r.out)} tokens: {r.out[:8]}...")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

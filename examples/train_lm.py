@@ -1,0 +1,64 @@
+"""End-to-end LM training driver with fault tolerance.
+
+Trains an xLSTM LM for a few hundred steps on the synthetic Markov corpus,
+with async checkpointing, an injected mid-run failure, and automatic
+restore — demonstrating the production loop (runtime/fault_tolerance.py) on
+one device. On a pod the identical code path runs under the production mesh
+(launch/train.py).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import Prefetcher, TokenStream
+from repro.models import model as M
+from repro.runtime.fault_tolerance import run_resilient
+from repro.training import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke("xlstm-125m")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    state = train_loop.init_state(params)
+    print(f"arch={cfg.name} params="
+          f"{sum(x.size for x in jax.tree.leaves(params)):,}")
+
+    step_fn = jax.jit(train_loop.make_train_step(
+        cfg, base_lr=1e-3, warmup=20, total_steps=args.steps))
+    stream = TokenStream(cfg.vocab, args.seq, args.batch)
+
+    ckpt_root = tempfile.mkdtemp(prefix="repro_ckpt_")
+    fail_step = args.steps // 2
+    print(f"checkpoints: {ckpt_root}; injecting node failure at step "
+          f"{fail_step}")
+
+    def on_metrics(step, metrics):
+        if step % 20 == 0:
+            print(f"  step {step:4d} loss {float(metrics['loss']):.4f}")
+
+    state, history = run_resilient(
+        train_step=step_fn, state=state,
+        batches=Prefetcher(iter(stream)),
+        ckpt_root=ckpt_root, ckpt_every=25,
+        fail_at={fail_step: RuntimeError("injected node failure")},
+        max_steps=args.steps, on_metrics=on_metrics)
+
+    print(f"survived failure; steps run: {len(history)}, "
+          f"loss {history[0]:.4f} -> {history[-1]:.4f}")
+    assert history[-1] < history[0], "loss should improve"
+    shutil.rmtree(ckpt_root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

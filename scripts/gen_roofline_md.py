@@ -1,0 +1,55 @@
+"""Generate the §Dry-run / §Roofline markdown tables from dryrun JSONs +
+the analytic cost model. Usage: PYTHONPATH=src python scripts/gen_roofline_md.py"""
+import glob, json, os, sys
+
+sys.path.insert(0, "src")
+from repro.launch.costs import cell_cost  # noqa: E402
+
+PEAK, HBM_BW, ICI = 197e12, 819e9, 50e9
+
+
+def rows(mesh):
+    out = []
+    for path in sorted(glob.glob(f"experiments/dryrun/{mesh}/*.json")):
+        if "__unrolled" in path or "__hc_" in path:
+            continue
+        r = json.load(open(path))
+        out.append(r)
+    return out
+
+
+def table(mesh):
+    multi = mesh == "2x16x16"
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "roofline frac | HLO flops/dev | coll bytes/dev (HLO) | mem/dev GB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(mesh):
+        cell = f"| {r['arch']} | {r['shape']} "
+        if "skipped" in r:
+            lines.append(cell + "| — | — | — | skipped (policy) | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(cell + f"| ERROR {r['error'][:40]} ||||||||||")
+            continue
+        ac = cell_cost(r["arch"], r["shape"], multi_pod=multi)
+        c, m, k = ac.flops_device / PEAK, ac.hbm_bytes_device / HBM_BW, \
+            ac.coll_bytes_device / ICI
+        terms = {"compute": c, "memory": m, "collective": k}
+        bound = max(terms, key=terms.get)
+        frac = c / max(c, m, k)
+        mem = r.get("memory_analysis", {})
+        memgb = (mem.get("argument_size_in_bytes", 0)) / 1e9
+        lines.append(
+            cell + f"| {c:.3e} | {m:.3e} | {k:.3e} | {bound} | {frac:5.1%} "
+            f"| {r['per_device']['hlo_flops']:.2e} "
+            f"| {r['per_device']['collective_bytes']:.2e} "
+            f"| {memgb:.2f} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh}\n")
+        print(table(mesh))

@@ -1,0 +1,80 @@
+"""Architecture registry: 10 assigned LM-family configs + paper SNN/CNN specs.
+
+``get(name)`` returns the full ArchConfig; ``get_smoke(name)`` returns a
+reduced same-family config for CPU smoke tests (full configs are exercised
+only via the dry-run's ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "xlstm_125m",
+    "internlm2_20b",
+    "starcoder2_7b",
+    "phi4_mini_3_8b",
+    "gemma_7b",
+    "qwen2_moe_a2_7b",
+    "moonshot_v1_16b_a3b",
+    "llava_next_34b",
+    "jamba_v0_1_52b",
+    "seamless_m4t_medium",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+})
+
+# the paper's own model zoo (Table 6)
+PAPER_SPECS = {
+    "mnist": dict(spec="32C3-32C3-P3-10C3-10", hw=28, c=1, params=20568),
+    "svhn": dict(spec="1C3-32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-10",
+                 hw=32, c=3, params=297990),
+    "cifar10": dict(spec="32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-128C3-10",
+                    hw=32, c=3, params=446122),
+}
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+# §Perf-winning execution knobs per architecture (EXPERIMENTS.md §Perf).
+# Applied by launch/dryrun.py --tuned and available to launchers; baselines
+# stay as-assigned so both numbers remain visible.
+TUNED = {
+    "xlstm-125m": dict(profile="dp_only", seq_chunk=64, dp_shard_map=True),
+    "internlm2-20b": dict(dp=64, tp=4, microbatches=2),
+    "qwen2-moe-a2.7b": dict(moe_pad=64),
+    "moonshot-v1-16b-a3b": dict(moe_pad=64),   # 64 % 16 == 0 already; EP hint
+}
+
+
+def get(name: str):
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke(name: str):
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.SMOKE
+
+
+def all_arch_names():
+    return [a.replace("_", "-") for a in ARCHS]
+
+
+def shape_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    """Whether a (arch, shape) cell runs; returns (ok, reason-if-skipped)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k dense-KV decode "
+                       "skipped per assignment (DESIGN.md long-context policy)")
+    return True, ""

@@ -1,0 +1,21 @@
+"""gemma-7b — GeGLU, head_dim=256 [arXiv:2403.08295; hf].
+
+28L d_model=3072 16H (kv=16 -> MHA) d_ff=24576 vocab=256000. head_dim 256
+(q/k/v project 3072 -> 4096). Embeddings tied (Gemma shares in/out).
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-7b", family="dense",
+    n_layers=28, d_model=3072, n_heads=16, kv_heads=16, head_dim=256,
+    d_ff=24576, vocab=256000, act="geglu", rope_theta=10000.0,
+    tie_embeddings=True,
+    microbatches=4, remat="full",
+    source="[arXiv:2403.08295; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="gemma-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=2, kv_heads=2, head_dim=48, d_ff=128,
+    vocab=128, act="geglu", tie_embeddings=True, remat="none",
+)

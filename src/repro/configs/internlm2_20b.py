@@ -1,0 +1,19 @@
+"""internlm2-20b — dense GQA transformer [arXiv:2403.17297; hf].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544, SwiGLU, RoPE.
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-20b", family="dense",
+    n_layers=48, d_model=6144, n_heads=48, kv_heads=8, d_ff=16384,
+    vocab=92544, act="swiglu", rope_theta=1e6,
+    microbatches=8, remat="full",
+    source="[arXiv:2403.17297; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="internlm2-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+    vocab=128, act="swiglu", remat="none",
+)

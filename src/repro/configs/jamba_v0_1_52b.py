@@ -1,0 +1,35 @@
+"""jamba-v0.1-52b — Mamba+attn 1:7 interleave, MoE [arXiv:2403.19887; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16e top-2.
+Period-8 block: attention at position 4, Mamba elsewhere (1:7 ratio); MoE
+replaces the dense FFN on every 2nd layer (every_k_layers=2).
+Mamba layers keep O(1) decode state -> sub_quadratic (runs long_500k; its 4
+attention layers hold the 500k KV cache, sharded).
+"""
+from repro.models.model import ArchConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import MambaConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, kv_heads=8, d_ff=14336,
+    vocab=65536, act="swiglu", rope_theta=0.0,   # Jamba uses no RoPE
+    block_pattern=("mamba", "mamba", "mamba", "mamba", "attn",
+                   "mamba", "mamba", "mamba"),
+    moe=MoEConfig(n_experts=16, top_k=2, expert_d_ff=14336, every_k_layers=2),
+    mamba=MambaConfig(d_inner=8192, d_state=16, d_conv=4),
+    sub_quadratic=True,
+    microbatches=8, remat="full",
+    source="[arXiv:2403.19887; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="jamba-smoke", family="hybrid",
+    n_layers=8, d_model=64, n_heads=4, kv_heads=2, d_ff=96,
+    vocab=128, act="swiglu", rope_theta=0.0,
+    block_pattern=("mamba", "mamba", "mamba", "mamba", "attn",
+                   "mamba", "mamba", "mamba"),
+    moe=MoEConfig(n_experts=4, top_k=2, expert_d_ff=96, every_k_layers=2),
+    mamba=MambaConfig(d_inner=128, d_state=8, d_conv=4),
+    sub_quadratic=True, remat="none",
+)

@@ -1,0 +1,22 @@
+"""llava-next-34b — VLM, anyres tiling [hf:llava-hf/...; unverified].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000 (Yi-34B backbone).
+Per the assignment the modality frontend is a STUB: input_specs() provides
+precomputed patch embeddings (B, S, d_model); only the transformer backbone
+is modeled.
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, kv_heads=8, d_ff=20480,
+    vocab=64000, act="swiglu", rope_theta=5e6, frontend="vision",
+    microbatches=8, remat="full",
+    source="[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]",
+)
+
+SMOKE = ArchConfig(
+    name="llava-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+    vocab=128, act="swiglu", frontend="vision", remat="none",
+)

@@ -1,0 +1,26 @@
+"""moonshot-v1-16b-a3b — kimi/moonlight MoE 64e top-6
+[hf:moonshotai/Moonlight-16B-A3B; hf].
+
+48L d_model=2048 16H (kv=16) expert d_ff=1408 vocab=163840, MoE 64e top-6.
+"""
+from repro.models.model import ArchConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, kv_heads=16, d_ff=0,
+    vocab=163840, act="swiglu", rope_theta=5e4,
+    moe=MoEConfig(n_experts=64, top_k=6, expert_d_ff=1408,
+                  shared_d_ff=2816, every_k_layers=1),
+    microbatches=4, remat="full",
+    source="[hf:moonshotai/Moonlight-16B-A3B; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="moonshot-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=0,
+    vocab=128, act="swiglu",
+    moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=96, shared_d_ff=96,
+                  every_k_layers=1),
+    remat="none",
+)

@@ -1,0 +1,19 @@
+"""phi4-mini-3.8b — RoPE SwiGLU GQA [arXiv:2412.08905; hf].
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, kv_heads=8, d_ff=8192,
+    vocab=200064, act="swiglu", rope_theta=10000.0, tie_embeddings=True,
+    microbatches=4, remat="full",
+    source="[arXiv:2412.08905; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="phi4-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+    vocab=256, act="swiglu", tie_embeddings=True, remat="none",
+)

@@ -1,0 +1,27 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B; hf].
+
+24L d_model=2048 16H (kv=16) expert d_ff=1408 vocab=151936, MoE 60e top-4.
+The 4 shared experts are materialized as one fused FFN of width 4*1408=5632
+(mathematically identical to 4 always-on experts summed).
+"""
+from repro.models.model import ArchConfig
+from repro.models.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, kv_heads=16, d_ff=0,
+    vocab=151936, act="swiglu", rope_theta=1e6,
+    moe=MoEConfig(n_experts=60, top_k=4, expert_d_ff=1408,
+                  shared_d_ff=5632, every_k_layers=1),
+    microbatches=4, remat="full",
+    source="[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=0,
+    vocab=128, act="swiglu",
+    moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=96, shared_d_ff=96,
+                  every_k_layers=1),
+    remat="none",
+)

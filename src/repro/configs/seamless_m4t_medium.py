@@ -1,0 +1,24 @@
+"""seamless-m4t-medium — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+12L d_model=1024 16H (kv=16) d_ff=4096 vocab=256206 (padded to 256256 for
+16-way sharding). Encoder-decoder: 12 encoder + 12 decoder layers. The audio
+frontend is a STUB per the assignment: input_specs() provides precomputed
+frame embeddings (B, S, d_model) for the encoder.
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium", family="audio",
+    n_layers=12, d_model=1024, n_heads=16, kv_heads=16, d_ff=4096,
+    vocab=256206, act="relu", norm="layernorm", rope_theta=0.0,
+    enc_dec=True, n_enc_layers=12, frontend="audio",
+    microbatches=1, remat="full",
+    source="[arXiv:2308.11596; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="seamless-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=128,
+    vocab=128, act="relu", norm="layernorm", rope_theta=0.0,
+    enc_dec=True, n_enc_layers=2, frontend="audio", remat="none",
+)

@@ -1,0 +1,20 @@
+"""starcoder2-7b — dense GQA, RoPE [arXiv:2402.19173; hf].
+
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152. GELU MLP,
+LayerNorm (starcoder2 uses standard LN), RoPE.
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, kv_heads=4, d_ff=18432,
+    vocab=49152, act="gelu", norm="layernorm", rope_theta=1e5,
+    microbatches=8, remat="full",
+    source="[arXiv:2402.19173; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="starcoder2-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+    vocab=128, act="gelu", norm="layernorm", remat="none",
+)

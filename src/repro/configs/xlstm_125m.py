@@ -1,0 +1,25 @@
+"""xlstm-125m — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+12L d_model=768 4H (GQA kv=4) d_ff=0 vocab=50304. d_ff=0: xLSTM blocks carry
+their own projections (models/xlstm.py). Alternating mLSTM/sLSTM pattern.
+Recurrent O(1) decode state -> sub_quadratic (runs long_500k).
+"""
+from repro.models.model import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, kv_heads=4, d_ff=0,
+    vocab=50304, act="gelu", rope_theta=0.0, tie_embeddings=True,
+    block_pattern=("mlstm", "slstm"),
+    sub_quadratic=True,
+    microbatches=1, remat="full",
+    source="[arXiv:2405.04517; unverified]",
+)
+
+SMOKE = ArchConfig(
+    name="xlstm-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=2, kv_heads=2, d_ff=0,
+    vocab=128, act="gelu", rope_theta=0.0, tie_embeddings=True,
+    block_pattern=("mlstm", "slstm"), sub_quadratic=True,
+    remat="none",
+)

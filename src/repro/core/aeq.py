@@ -1,0 +1,141 @@
+"""Address-Event Queues with kernel-phase memory interlacing (paper Figs. 3-5).
+
+The paper's AEQ is a set of K*K physical queues (one per *kernel coordinate*,
+a.k.a. phase). A spike at feature-map position (y, x) has
+
+    phase  ph = (y mod K) * K + (x mod K)         (which queue)
+    window address (i_c, j_c) = (y // K, x // K)  (word stored in the queue)
+
+Interlacing guarantees: two events in the *same* phase always have distinct
+positions, so for any fixed kernel offset (dy, dx) their target neurons are
+distinct -> one event per phase can be processed fully in parallel without
+write conflicts. This is the conflict-freedom argument of paper Fig. 5,
+re-derived for TPU vector lanes (see kernels/event_accum.py).
+
+JAX requires static shapes, so queues have a fixed capacity ``depth`` —
+mirroring the paper's fixed AEQ depth D. Overflowing events are *dropped and
+counted* (the hardware instead stalls; the count lets experiments verify that
+a chosen D never overflows, which is how the paper sizes D).
+
+Segmentation (paper Fig. 3): queues are segmented by algorithmic time step t
+and input channel c. We materialize the segmentation as leading array axes
+(T, C, K*K, depth) — identical semantics, static layout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .encoding import AEFormat, pack_events, unpack_events
+
+
+class AEQ(NamedTuple):
+    words: jnp.ndarray     # (T, C, K2, depth) int32 packed AE words
+    counts: jnp.ndarray    # (T, C, K2) int32 events per segment/phase
+    overflow: jnp.ndarray  # () int32 total dropped events (capacity misses)
+
+
+def aeq_init(fmt: AEFormat, T: int, C: int, depth: int) -> AEQ:
+    K2 = fmt.kernel * fmt.kernel
+    return AEQ(
+        words=jnp.full((T, C, K2, depth), fmt.invalid_word, jnp.int32),
+        counts=jnp.zeros((T, C, K2), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def _phase_split(fmt: AEFormat, spike_map: jnp.ndarray) -> jnp.ndarray:
+    """(H, W) map -> (K2, n_win*n_win) per-phase window occupancy.
+
+    Pads the map up to n_win*K on both axes (padding cannot contain spikes).
+    """
+    K, n = fmt.kernel, fmt.n_win
+    H, W = spike_map.shape
+    pad_y, pad_x = n * K - H, n * K - W
+    m = jnp.pad(spike_map, ((0, pad_y), (0, pad_x)))
+    # (n, K, n, K) -> (K, K, n, n) -> (K2, n*n)
+    m = m.reshape(n, K, n, K).transpose(1, 3, 0, 2).reshape(K * K, n * n)
+    return m
+
+
+def compact_spikes(fmt: AEFormat, spike_map: jnp.ndarray, depth: int):
+    """Dense (H, W) 0/1 spike map -> per-phase packed queues.
+
+    Returns (words (K2, depth), counts (K2,), dropped ()). This is the
+    software model of the Thresholding Unit's event encoder; the prefix-sum
+    compaction mirrors the hardware's sequential queue append.
+    """
+    occ = _phase_split(fmt, spike_map) > 0            # (K2, P) bool
+    n = fmt.n_win
+    pos = jnp.arange(occ.shape[1], dtype=jnp.int32)
+    wy, wx = pos // n, pos % n
+
+    slot = jnp.cumsum(occ.astype(jnp.int32), axis=1) - 1      # (K2, P)
+    packed = pack_events(fmt, wy[None, :], wx[None, :], occ)  # (K2, P)
+    target = jnp.where(occ & (slot < depth), slot, depth)     # depth == drop
+
+    words = jnp.full((occ.shape[0], depth), fmt.invalid_word, jnp.int32)
+    words = _scatter_rows(words, target, packed)
+
+    total = occ.sum(axis=1).astype(jnp.int32)
+    counts = jnp.minimum(total, depth)
+    dropped = jnp.maximum(total - depth, 0).sum()
+    return words, counts, dropped
+
+
+def _scatter_rows(words, target, packed):
+    """Row-wise scatter words[k, target[k, p]] = packed[k, p], drop OOB."""
+    K2, depth = words.shape
+    rows = jnp.arange(K2, dtype=jnp.int32)[:, None]
+    flat = words.reshape(-1)
+    # row-major flat index; out-of-range targets (== depth) are dropped by
+    # clamping into a scratch slot appended past the end.
+    flat = jnp.concatenate([flat, jnp.zeros((1,), words.dtype)])
+    idx = jnp.where(target < depth, rows * depth + target, K2 * depth)
+    flat = flat.at[idx.reshape(-1)].set(packed.reshape(-1))
+    return flat[:-1].reshape(K2, depth)
+
+
+def aeq_set_segment(aeq: AEQ, fmt: AEFormat, t: int, spikes_chw: jnp.ndarray) -> AEQ:
+    """Write the events of time step ``t`` (all C channels) into the queue."""
+    import jax
+
+    depth = aeq.words.shape[-1]
+    words, counts, dropped = jax.vmap(
+        lambda m: compact_spikes(fmt, m, depth)
+    )(spikes_chw)
+    return AEQ(
+        words=aeq.words.at[t].set(words),
+        counts=aeq.counts.at[t].set(counts),
+        overflow=aeq.overflow + dropped.sum(),
+    )
+
+
+def aeq_from_raster(fmt: AEFormat, raster: jnp.ndarray, depth: int) -> AEQ:
+    """(T, C, H, W) 0/1 raster -> fully populated AEQ."""
+    T, C = raster.shape[:2]
+    aeq = aeq_init(fmt, T, C, depth)
+    for t in range(T):
+        aeq = aeq_set_segment(aeq, fmt, t, raster[t])
+    return aeq
+
+
+def decode_positions(fmt: AEFormat, words: jnp.ndarray):
+    """(K2, depth) packed words -> absolute (y, x, valid) positions.
+
+    y = i_c * K + ky with phase ph = ky*K + kx implicit in the row index —
+    the 'implicit coordinate' trick of the compressed encoding (Sec. 5.2).
+    """
+    K = fmt.kernel
+    K2 = K * K
+    i_c, j_c, valid = unpack_events(fmt, words)
+    ph = jnp.arange(K2, dtype=jnp.int32)[:, None]
+    ky, kx = ph // K, ph % K
+    y = i_c * K + ky
+    x = j_c * K + kx
+    return y, x, valid
+
+
+def aeq_total_events(aeq: AEQ) -> jnp.ndarray:
+    return aeq.counts.sum()

@@ -1,0 +1,130 @@
+"""Dense CNN baseline — the FINN counterpart (Sec. 3.2), TPU-native.
+
+FINN emits a streaming dataflow pipeline of MAC arrays; the honest TPU
+equivalent of "the dense way" is im2col + MXU matmul with quantized weights
+and activations. Latency on TPU is deterministic and input-independent, the
+property the paper leans on for the red reference lines in Figs. 7/9/12-15.
+
+The same forward is used (a) float for training, (b) fake-quant for the
+Brevitas-style quantized training, (c) int8 via kernels/quant_matmul for the
+deployed cost model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import fake_quant, fake_quant_unsigned
+from .snn_model import parse_spec
+
+
+class CNNCosts(NamedTuple):
+    macs: jnp.ndarray         # multiply-accumulates (static per spec)
+    weight_bytes: int
+    act_bytes: int
+
+
+def cnn_forward(
+    params,
+    spec: str,
+    image: jnp.ndarray,          # (H, W, C) or (B, H, W, C)
+    *,
+    weight_bits: int | None = None,
+    act_bits: int | None = None,
+    return_acts: bool = False,
+):
+    """Forward pass. ReLU after every conv; final dense has no activation."""
+    layers = parse_spec(spec)
+    batched = image.ndim == 4
+    x = image if batched else image[None]
+
+    acts = []
+    for li, ly in enumerate(layers):
+        if ly[0] == "conv":
+            w, b = params[li]["w"], params[li]["b"]
+            if weight_bits:
+                w = fake_quant(w, weight_bits)
+            x = jax.lax.conv_general_dilated(
+                x, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b
+            x = jax.nn.relu(x)
+            if act_bits:
+                x = fake_quant_unsigned(x, act_bits)
+            acts.append(x)
+        elif ly[0] == "pool":
+            p = ly[1]
+            B, H, W, C = x.shape
+            Ho, Wo = H // p, W // p
+            x = x[:, : Ho * p, : Wo * p, :].reshape(B, Ho, p, Wo, p, C).max(axis=(2, 4))
+        else:  # dense
+            w, b = params[li]["w"], params[li]["b"]
+            if weight_bits:
+                w = fake_quant(w, weight_bits)
+            x = x.reshape(x.shape[0], -1) @ w + b
+            acts.append(x)
+
+    logits = x if batched else x[0]
+    if return_acts:
+        return logits, acts
+    return logits
+
+
+def cnn_costs(params, spec: str, input_hw: int, input_c: int,
+              weight_bits: int = 8, act_bits: int = 8) -> CNNCosts:
+    """Static MAC/byte counts for the dense pipeline (input-independent)."""
+    layers = parse_spec(spec)
+    hw, c = input_hw, input_c
+    macs = 0
+    act_bytes = hw * hw * c * act_bits // 8
+    weight_bytes = 0
+    for li, ly in enumerate(layers):
+        if ly[0] == "conv":
+            k, cout = ly[2], ly[1]
+            macs += hw * hw * k * k * c * cout
+            weight_bytes += (k * k * c * cout * weight_bits) // 8 + cout * 4
+            c = cout
+            act_bytes += hw * hw * c * act_bits // 8
+        elif ly[0] == "pool":
+            hw = hw // ly[1]
+            act_bytes += hw * hw * c * act_bits // 8
+        else:
+            n_in = hw * hw * c
+            macs += n_in * ly[1]
+            weight_bytes += (n_in * ly[1] * weight_bits) // 8 + ly[1] * 4
+            hw, c = 1, ly[1]
+    return CNNCosts(jnp.asarray(macs), weight_bytes, act_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Training (the paper trains with Keras; we train the same specs in JAX)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def make_train_step(spec: str, weight_bits=None, act_bits=None, lr=1e-3):
+    """Returns (init_opt, step) — AdamW on the CNN params."""
+    from ..training.optimizer import adamw_init, adamw_update
+
+    def loss_fn(params, batch):
+        logits = cnn_forward(params, spec, batch["image"],
+                             weight_bits=weight_bits, act_bits=act_bits)
+        return cross_entropy(logits, batch["label"])
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, loss
+
+    return adamw_init, step
+
+
+def accuracy(params, spec, images, labels, **quant):
+    logits = cnn_forward(params, spec, images, **quant)
+    return (jnp.argmax(logits, -1) == labels).mean()

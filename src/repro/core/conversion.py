@@ -1,0 +1,107 @@
+"""ANN -> SNN conversion (snntoolbox's data-based weight normalization).
+
+The paper converts Keras CNNs with snntoolbox [17] to m-TTFS SNNs and reports
+<0.4 %-pt accuracy loss for MNIST. We implement the underlying algorithm
+(Rueckauer et al. 2017, "data-based normalization"):
+
+    lambda_l = p-th percentile of layer-l ReLU activations on calibration data
+    (p = 99.0 default: measurably better than 99.9 at T=4 — the lower norm
+    trades rare clipping for finer spike-count quantization; swept in tests)
+    w'_l = w_l * lambda_{l-1} / lambda_l
+    b'_l = b_l / lambda_l
+    V_t  = 1.0 for every layer
+
+After normalization, every layer's activation is <= ~1 per time step, so IF
+neurons with unit threshold approximate the ReLU network; more time steps T
+refine the approximation (the paper uses T=4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .cnn_baseline import cnn_forward
+from .snn_model import parse_spec
+
+
+def calibrate_lambdas(params, spec: str, calib_images, percentile: float = 99.0):
+    """Per weighted layer activation scale lambda_l (plus lambda_0 = input)."""
+    _, acts = cnn_forward(params, spec, calib_images, return_acts=True)
+    lam0 = jnp.percentile(calib_images, percentile)
+    lams = [jnp.maximum(jnp.percentile(a, percentile), 1e-6) for a in acts]
+    return [jnp.maximum(lam0, 1e-6)] + lams
+
+
+def convert(params, spec: str, calib_images, percentile: float = 99.0):
+    """Returns (snn_params, thresholds) — same pytree structure as params,
+    with thresholds[li] = 1.0 for weighted layers (ignored for pools)."""
+    layers = parse_spec(spec)
+    lams = calibrate_lambdas(params, spec, calib_images, percentile)
+
+    snn_params = []
+    thresholds = []
+    wi = 0  # index into lams (weighted layers only)
+    for li, ly in enumerate(layers):
+        if ly[0] == "pool":
+            snn_params.append({})
+            thresholds.append(jnp.asarray(1.0))
+            continue
+        w, b = params[li]["w"], params[li]["b"]
+        lam_prev, lam = lams[wi], lams[wi + 1]
+        snn_params.append({"w": w * lam_prev / lam, "b": b / lam})
+        thresholds.append(jnp.asarray(1.0))
+        wi += 1
+    return snn_params, thresholds
+
+
+def balance_thresholds(
+    snn_params,
+    thresholds,
+    cfg,
+    cnn_params,
+    calib_images,
+    grid=(0.25, 0.4, 0.55, 0.7, 0.85, 1.0, 1.25),
+):
+    """Greedy per-layer threshold balancing (Diehl et al. 2015 style).
+
+    Data-based weight normalization assumes a spike *every* step at unit
+    rate; the m-TTFS codes deliver fewer (spike-once: one total; continuous
+    emission: T - t_cross). A per-layer threshold scale repairs the resulting
+    drive mismatch. We greedily pick, layer by layer, the scale that
+    maximizes argmax agreement with the source CNN on calibration data —
+    a conversion-time calibration, no retraining.
+    """
+    import jax
+
+    from .cnn_baseline import cnn_forward
+    from .snn_model import parse_spec, snn_dense_infer_batch
+
+    layers = parse_spec(cfg.spec)
+    cnn_pred = jnp.argmax(
+        cnn_forward(cnn_params, cfg.spec, calib_images), -1
+    )
+
+    infer = jax.jit(lambda ths, ims: snn_dense_infer_batch(snn_params, ths, cfg, ims))
+
+    def agreement(ths):
+        logits, _ = infer(ths, calib_images)
+        return float((jnp.argmax(logits, -1) == cnn_pred).mean())
+
+    ths = list(thresholds)
+    for _pass in range(2):  # two coordinate-descent sweeps
+        for li, ly in enumerate(layers):
+            if ly[0] != "conv":
+                continue  # pools have no threshold; final dense never thresholds
+            best_s, best_a = 1.0, -1.0
+            for s in grid:
+                trial = list(ths)
+                trial[li] = thresholds[li] * s
+                a = agreement(trial)
+                if a > best_a:
+                    best_a, best_s = a, s
+            ths[li] = thresholds[li] * best_s
+    return ths
+
+
+def conversion_gap(cnn_acc: float, snn_acc: float) -> float:
+    """The paper's headline metric: accuracy delta after conversion."""
+    return float(cnn_acc) - float(snn_acc)

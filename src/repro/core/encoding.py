@@ -1,0 +1,164 @@
+"""Spike encodings and the paper's compressed Address-Event word format.
+
+Two layers of "encoding" exist in the paper (and here):
+
+1. **Input encodings** — how an analog image becomes spikes over T algorithmic
+   time steps: rate coding, TTFS, and the constant-input-current scheme used
+   by snntoolbox-converted nets (Sec. 2.1.2).
+
+2. **Address-Event (AE) word encoding** — how a spike event is stored inside
+   an AEQ (Sec. 5.2, Eq. 6-7). The paper's *compressed* encoding stores only
+   the window ("address") coordinates (i_c, j_c); the kernel coordinate is
+   implicit in *which* of the K*K queues the word sits in, and status
+   information is encoded in-band using the spare code points above
+   ceil(W/K). We implement both the original (coords + 2 status bits) and the
+   compressed format, including the Eq. (7) fallback condition.
+
+TPU adaptation note: on FPGA the win is BRAM aspect-ratio fit; on TPU the win
+is HBM traffic — a packed int16/int32 word moves 2-4x fewer bytes per event
+than unpacked coordinate tuples. ``word_nbytes`` reports the storage width
+used by the energy model.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# status code points (stored in the spare patterns of the i-coordinate field)
+STATUS_INVALID = 0   # empty queue slot / padding
+STATUS_SEG_END = 1   # segment boundary marker (original encoding: status bits)
+
+
+class AEFormat(NamedTuple):
+    """Static description of an AE word layout for one feature-map geometry."""
+
+    width: int          # feature map width W (maps are square, like the paper)
+    kernel: int         # kernel size K
+    n_win: int          # ceil(W / K) windows per dimension
+    bits_coord: int     # bits per window coordinate (Eq. 6)
+    compressed: bool    # False -> original encoding (2 explicit status bits)
+    word_bits: int      # total bits per stored event word
+    invalid_word: int   # the packed word representing an empty slot
+
+
+def spare_patterns(width: int, kernel: int) -> int:
+    """Number of unused bit patterns per coordinate field (paper: 6 for W=28,K=3)."""
+    n_win = math.ceil(width / kernel)
+    bits = max(1, math.ceil(math.log2(n_win))) if n_win > 1 else 1
+    return (1 << bits) - n_win
+
+
+def make_format(width: int, kernel: int, *, compressed: bool = True) -> AEFormat:
+    """Build the AE word format for a (square) feature map of ``width``.
+
+    Eq. (6): bits per coordinate = ceil(log2(W / K)).
+    Eq. (7): if fewer than 1 spare pattern remains (W/K just below a power of
+    two), the compressed encoding cannot carry in-band status -> fall back to
+    the original encoding with 2 explicit status bits.
+    """
+    n_win = math.ceil(width / kernel)
+    bits = max(1, math.ceil(math.log2(n_win))) if n_win > 1 else 1
+
+    spare = (1 << bits) - n_win
+    if compressed and spare < 1:
+        # Eq. (7) fallback: not enough spare code points for status.
+        compressed = False
+
+    if compressed:
+        word_bits = 2 * bits
+        # status lives in the i-field's spare patterns: i == n_win + code
+        invalid = _pack_fields(n_win + STATUS_INVALID, 0, bits)
+    else:
+        word_bits = 2 * bits + 2  # original: explicit 2 status bits
+        invalid = ((STATUS_INVALID + 1) << (2 * bits)) | 0  # status=1 -> invalid
+
+    return AEFormat(
+        width=width,
+        kernel=kernel,
+        n_win=n_win,
+        bits_coord=bits,
+        compressed=compressed,
+        word_bits=word_bits,
+        invalid_word=invalid,
+    )
+
+
+def _pack_fields(i, j, bits):
+    return (i << bits) | j
+
+
+def pack_events(fmt: AEFormat, i_c, j_c, valid):
+    """Pack window coordinates into AE words (int32 carrier).
+
+    ``i_c``/``j_c`` are window coordinates in [0, n_win); invalid lanes are
+    encoded with the in-band (compressed) or explicit (original) status.
+    """
+    i_c = jnp.asarray(i_c, jnp.int32)
+    j_c = jnp.asarray(j_c, jnp.int32)
+    bits = fmt.bits_coord
+    if fmt.compressed:
+        word = (i_c << bits) | j_c
+        return jnp.where(valid, word, jnp.int32(fmt.invalid_word))
+    else:
+        word = (i_c << bits) | j_c  # status bits 00 = valid event
+        return jnp.where(valid, word, jnp.int32(fmt.invalid_word))
+
+
+def unpack_events(fmt: AEFormat, words):
+    """Inverse of :func:`pack_events` -> (i_c, j_c, valid)."""
+    words = jnp.asarray(words, jnp.int32)
+    bits = fmt.bits_coord
+    mask = (1 << bits) - 1
+    if fmt.compressed:
+        i_c = (words >> bits) & mask
+        j_c = words & mask
+        valid = i_c < fmt.n_win  # spare patterns of the i-field are status
+    else:
+        status = (words >> (2 * bits)) & 0x3
+        i_c = (words >> bits) & mask
+        j_c = words & mask
+        valid = status == 0
+    return i_c, j_c, valid
+
+
+def word_nbytes(fmt: AEFormat) -> int:
+    """Bytes a word occupies in the TPU event buffer (power-of-two storage)."""
+    for nb in (1, 2, 4):
+        if fmt.word_bits <= 8 * nb:
+            return nb
+    raise ValueError(f"AE word of {fmt.word_bits} bits does not fit int32")
+
+
+# ---------------------------------------------------------------------------
+# Input encodings (Sec. 2.1.2)
+# ---------------------------------------------------------------------------
+
+def encode_constant_current(image: jnp.ndarray, T: int) -> jnp.ndarray:
+    """snntoolbox-style analog input: the image is applied as a constant
+    input current at every algorithmic time step. Returns (T, *image.shape).
+    """
+    return jnp.broadcast_to(image, (T,) + image.shape)
+
+
+def encode_ttfs(image: jnp.ndarray, T: int, theta: float = 0.1) -> jnp.ndarray:
+    """TTFS input coding: brighter pixels spike earlier; one spike per pixel.
+
+    Pixel x (in [0,1]) spikes at step floor((1-x)*(T-1)); pixels below
+    ``theta`` never spike. Returns a (T, *shape) 0/1 raster.
+    """
+    x = jnp.clip(image, 0.0, 1.0)
+    t_spike = jnp.floor((1.0 - x) * (T - 1)).astype(jnp.int32)
+    ts = jnp.arange(T, dtype=jnp.int32).reshape((T,) + (1,) * image.ndim)
+    raster = (ts == t_spike) & (x > theta)
+    return raster.astype(image.dtype)
+
+
+def encode_rate(image: jnp.ndarray, T: int, key) -> jnp.ndarray:
+    """Rate coding: Bernoulli(x) spike per step. Returns (T, *shape) raster."""
+    import jax
+
+    x = jnp.clip(image, 0.0, 1.0)
+    u = jax.random.uniform(key, (T,) + image.shape, dtype=image.dtype)
+    return (u < x).astype(image.dtype)

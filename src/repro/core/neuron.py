@@ -1,0 +1,100 @@
+"""Integrate-and-Fire neuron dynamics (paper Eq. 1-2).
+
+The paper uses the IF model *without* leakage (hardware-friendliness) and the
+m-TTFS encoding variant of Sommer et al. [4]: a neuron may spike at most once
+and its membrane potential is NOT reset after crossing the threshold.
+
+Three variants are provided:
+
+- ``if_reset``   : classic IF, Eq. (1)-(2): reset to 0 after a spike.
+- ``mttfs``      : spike-once latch, no reset (the paper's accelerator model).
+- ``mttfs_cont`` : Han & Roy [11] variant — continuous emission once the
+                   threshold has been crossed (kept for completeness).
+
+All functions are pure and jit/vmap/scan friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+MODES = ("if_reset", "mttfs", "mttfs_cont")
+
+
+class IFState(NamedTuple):
+    """State of a population of IF neurons (any array shape)."""
+
+    v_mem: jnp.ndarray        # membrane potentials V_m
+    has_spiked: jnp.ndarray   # bool latch: neuron has emitted its spike (m-TTFS)
+
+
+def if_init(shape, dtype=jnp.float32) -> IFState:
+    return IFState(
+        v_mem=jnp.zeros(shape, dtype),
+        has_spiked=jnp.zeros(shape, dtype=jnp.bool_),
+    )
+
+
+def if_step(
+    state: IFState,
+    input_current: jnp.ndarray,
+    v_thresh: float | jnp.ndarray,
+    *,
+    mode: str = "mttfs",
+    leak: float = 0.0,
+) -> tuple[IFState, jnp.ndarray]:
+    """One algorithmic time step ``t`` of Eq. (1)-(2).
+
+    ``input_current`` is the summed weighted input  sum_i w_ij * x_i^{l-1}(t-1)
+    (produced either densely or by event-driven accumulation — the two are
+    mathematically identical, which our property tests assert).
+
+    Returns ``(new_state, spikes)`` with ``spikes`` a float array of 0/1.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+
+    v = state.v_mem + input_current
+    if leak:
+        # leaky-IF extension (Sec. 2.1.1); disabled (leak=0) in the paper.
+        v = v - jnp.asarray(leak, v.dtype)
+
+    crossed = v > jnp.asarray(v_thresh, v.dtype)
+
+    if mode == "if_reset":
+        spikes = crossed
+        v = jnp.where(crossed, jnp.zeros_like(v), v)
+        latch = state.has_spiked  # unused in this mode
+    elif mode == "mttfs":
+        # spike exactly once; membrane keeps integrating but never re-fires.
+        spikes = crossed & ~state.has_spiked
+        latch = state.has_spiked | crossed
+    else:  # mttfs_cont
+        spikes = crossed
+        latch = state.has_spiked | crossed
+
+    return IFState(v_mem=v, has_spiked=latch), spikes.astype(v.dtype)
+
+
+def if_run(
+    input_currents: jnp.ndarray,  # (T, *shape) per-step input currents
+    v_thresh: float,
+    *,
+    mode: str = "mttfs",
+    leak: float = 0.0,
+) -> jnp.ndarray:
+    """Run T steps from a zero state, returning the (T, *shape) spike raster.
+
+    Reference implementation used by tests and the dense oracle; the
+    accelerator path in ``snn_model.py`` interleaves this with event queues.
+    """
+    import jax
+
+    def step(state, cur):
+        state, s = if_step(state, cur, v_thresh, mode=mode, leak=leak)
+        return state, s
+
+    state = if_init(input_currents.shape[1:], input_currents.dtype)
+    _, spikes = jax.lax.scan(step, state, input_currents)
+    return spikes

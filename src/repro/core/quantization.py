@@ -1,0 +1,46 @@
+"""Uniform fake-quantization (FINN/Brevitas analogue, Sec. 3.2).
+
+FINN trains with Brevitas mixed-precision quantization (the paper's CNN
+configs use 6- and 8-bit weights, Table 2). We reproduce the arithmetic with
+straight-through-estimator fake-quant during training and a real int8 path
+(kernels/quant_matmul.py) for the deployed inference cost model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_symmetric(x: jnp.ndarray, bits: int):
+    """Per-tensor symmetric quantization -> (q_int, scale)."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32), scale
+
+
+def fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Straight-through fake quantization (gradient passes unchanged)."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jax.lax.stop_gradient(jnp.max(jnp.abs(x))), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant_unsigned(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Unsigned STE fake-quant for post-ReLU activations."""
+    qmax = 2**bits - 1
+    scale = jnp.maximum(jax.lax.stop_gradient(jnp.max(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), 0, qmax) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_params(params, bits: int):
+    """Quantize every weight tensor; biases stay float (FINN keeps wide bias)."""
+    out = []
+    for p in params:
+        q = dict(p)
+        if "w" in p:
+            q["w"] = fake_quant(p["w"], bits)
+        out.append(q)
+    return out

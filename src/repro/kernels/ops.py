@@ -1,0 +1,54 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True — the kernel
+*body* runs, validating the logic; on a real TPU set ``REPRO_PALLAS_COMPILE=1``
+(or pass interpret=False) to compile them. ``backend='ref'`` selects the
+pure-jnp oracle (used for differential testing and as the XLA fallback).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .event_accum import event_accum as _event_accum
+from .moe_gather import moe_gather as _moe_gather
+from .quant_matmul import quant_matmul as _quant_matmul
+from .spike_compact import spike_compact as _spike_compact
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def event_accum(words, counts, weights, v_mem, *, K, n_win, bits, backend="pallas"):
+    if backend == "ref":
+        return _ref.event_accum_ref(words, counts, weights, v_mem,
+                                    K=K, n_win=n_win, bits=bits)
+    return _event_accum(words, counts, weights, v_mem,
+                        K=K, n_win=n_win, bits=bits, interpret=_interpret())
+
+
+def spike_compact(occ, *, n_win, bits, depth, invalid, backend="pallas"):
+    if backend == "ref":
+        return _ref.spike_compact_ref(occ, n_win=n_win, bits=bits,
+                                      depth=depth, invalid=invalid)
+    return _spike_compact(occ, n_win=n_win, bits=bits, depth=depth,
+                          invalid=invalid, interpret=_interpret())
+
+
+def quant_matmul(a_q, b_q, a_scale, b_scale, *, backend="pallas", **blocks):
+    if backend == "ref":
+        return _ref.quant_matmul_ref(a_q, b_q, a_scale, b_scale)
+    return _quant_matmul(a_q, b_q, a_scale, b_scale,
+                         interpret=_interpret(), **blocks)
+
+
+def moe_gather(x, indices, *, backend="pallas", block_rows=8):
+    if backend == "ref":
+        return _ref.moe_gather_ref(x, indices)
+    return _moe_gather(x, indices, block_rows=block_rows, interpret=_interpret())

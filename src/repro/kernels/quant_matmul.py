@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: int8 x int8 -> int32 tiled matmul (fp32 dequant).
+
+The dense counterpart's hot loop (FINN's MAC arrays -> the MXU). Classic
+three-loop tiling with an fp32 VMEM accumulator; MXU-aligned 128x128 blocks.
+Used by the deployed CNN cost path and as the int8 GEMM for quantized LM
+serving experiments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def quant_matmul(
+    a_q: jnp.ndarray,      # (M, K) int8
+    b_q: jnp.ndarray,      # (K, N) int8
+    a_scale: jnp.ndarray,  # () fp32
+    b_scale: jnp.ndarray,  # () fp32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Dequantized fp32 product of two int8 quantized operands."""
+    M, K = a_q.shape
+    K2, N = b_q.shape
+    assert K == K2
+
+    pad = lambda x, m0, m1: jnp.pad(
+        x, ((0, (-x.shape[0]) % m0), (0, (-x.shape[1]) % m1))
+    )
+    a_p = pad(a_q, block_m, block_k)
+    b_p = pad(b_q, block_k, block_n)
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    k_steps = Kp // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(Mp // block_m, Np // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        # fp32 accumulator tile lives in VMEM across the k loop
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:M, :N] * (a_scale * b_scale)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+tests/test_kernels.py sweeps shapes/dtypes and asserts allclose between each
+kernel (interpret=True on CPU) and its oracle here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def event_accum_ref(words, counts, weights, v_mem, *, K, n_win, bits):
+    """Oracle for kernels.event_accum: decode events densely, then SAME-conv.
+
+    words (C_in, K2, D), counts (C_in, K2), weights (K,K,C_in,C_out),
+    v_mem (H, W, C_out). Decodes the queues to a dense spike map and adds
+    conv2d(spikes, weights) — the identity the whole design rests on.
+    """
+    C_in, K2, D = words.shape
+    H, W, C_out = v_mem.shape
+    mask = (1 << bits) - 1
+
+    i_c = (words >> bits) & mask
+    j_c = words & mask
+    slot = jnp.arange(D, dtype=jnp.int32)
+    valid = (i_c < n_win) & (slot[None, None, :] < counts[..., None])
+
+    ph = jnp.arange(K2, dtype=jnp.int32)[None, :, None]
+    y = i_c * K + ph // K
+    x = j_c * K + ph % K
+
+    side = n_win * K
+    spikes = jnp.zeros((C_in, side, side), v_mem.dtype)
+    cidx = jnp.broadcast_to(jnp.arange(C_in)[:, None, None], y.shape)
+    spikes = spikes.at[
+        cidx.reshape(-1),
+        jnp.where(valid, y, 0).reshape(-1),
+        jnp.where(valid, x, 0).reshape(-1),
+    ].add(valid.reshape(-1).astype(v_mem.dtype))
+    spikes = spikes[:, :H, :W]
+
+    out = jax.lax.conv_general_dilated(
+        spikes[None], weights, (1, 1), "SAME",
+        dimension_numbers=("NCHW", "HWIO", "NHWC"),
+    )[0]
+    return v_mem + out
+
+
+def spike_compact_ref(occ, *, n_win, bits, depth, invalid):
+    """Oracle for kernels.spike_compact: cumsum-based compaction per row."""
+    R, P = occ.shape
+    occ = occ > 0
+    pos = jnp.arange(P, dtype=jnp.int32)
+    wy, wx = pos // n_win, pos % n_win
+    packed = (wy << bits) | wx
+
+    slot = jnp.cumsum(occ.astype(jnp.int32), axis=1) - 1
+    target = jnp.where(occ & (slot < depth), slot, depth)
+
+    flat = jnp.full((R, depth + 1), invalid, jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(R)[:, None], (R, P))
+    flat = flat.at[rows.reshape(-1), target.reshape(-1)].set(
+        jnp.broadcast_to(packed[None], (R, P)).reshape(-1)
+    )
+    words = flat[:, :depth]
+    counts = occ.sum(axis=1).astype(jnp.int32)
+    return words, counts
+
+
+def quant_matmul_ref(a_q, b_q, a_scale, b_scale):
+    """Oracle for kernels.quant_matmul: exact int32 product, fp32 dequant."""
+    prod = jnp.matmul(
+        a_q.astype(jnp.int32), b_q.astype(jnp.int32)
+    ).astype(jnp.float32)
+    return prod * (a_scale * b_scale)
+
+
+def moe_gather_ref(x, indices):
+    """Oracle for kernels.moe_gather: plain row gather with -1 -> zeros."""
+    ok = indices >= 0
+    rows = x[jnp.clip(indices, 0, x.shape[0] - 1)]
+    return rows * ok[:, None].astype(x.dtype)

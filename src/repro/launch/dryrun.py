@@ -1,0 +1,407 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation) and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-20b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell writes experiments/dryrun/<mesh>/<arch>__<shape>.json containing
+memory_analysis, cost_analysis, per-collective byte counts parsed from the
+partitioned HLO, and the derived three-term roofline (§Roofline).
+
+NOTE: the two XLA_FLAGS lines above must run before ANY other import — jax
+locks the device count on first init. Do not set this flag globally.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.costs import active_params, cell_cost, model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.sharding.resolver import Resolver, map_with_axes, use_resolver
+from repro.training import train_loop
+
+# --- TPU v5e machine constants (also used by core/energy.py) --------------
+PEAK_BF16 = 197e12       # FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (~per-chip usable collective bw)
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)", re.IGNORECASE)
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|s64|u64|pred|s16|u16)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_computations(hlo_text: str):
+    """Split post-optimization HLO text into {name: [lines]} + entry name."""
+    comps, cur, entry = {}, None, None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and "{" in line and (
+                line.startswith("%") or line.startswith("ENTRY")):
+            m = re.match(r"^(ENTRY\s+)?(%[^\s(]+)", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=(%[^\s,}]+).*?body=(%[^\s,}]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _loop_multipliers(comps, entry):
+    """Execution-count multiplier per computation: while bodies inherit the
+    caller's multiplier x the loop trip count (read from the largest integer
+    constant in the loop's condition computation — exact for counted loops,
+    an upper bound otherwise)."""
+    mult = {entry: 1.0}
+    frontier = [entry]
+    while frontier:
+        comp = frontier.pop()
+        for line in comps.get(comp, ()):
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            consts = [int(c) for cl in comps.get(cond, ())
+                      for c in _CONST_RE.findall(cl)]
+            trip = max(consts) if consts else 1
+            new_mult = mult[comp] * max(trip, 1)
+            if mult.get(body, 0) < new_mult:
+                mult[body] = new_mult
+                frontier.append(body)
+    return mult
+
+
+_COLL_OP_RE = re.compile(
+    r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str, loop_trip_factor: int = 1) -> dict:
+    """Loop-aware collective byte accounting of the partitioned HLO.
+
+    Each collective's result bytes are multiplied by the execution count of
+    its enclosing computation (while bodies run trip_count times but appear
+    once in the text; trip counts are parsed from loop-condition constants).
+    Tuple results and async -start/-done pairs are handled.
+    ``loop_trip_factor`` is kept for API compat (unused; exact counts now).
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return {}
+    mult = _loop_multipliers(comps, entry)
+    out: dict[str, int] = {}
+    for comp, lines in comps.items():
+        m_c = mult.get(comp)
+        if m_c is None:
+            continue  # computation never reached from entry via loops: pure
+            # helper (reduction adders, fusions) — collectives don't live there
+        for line in lines:
+            m = _COLL_OP_RE.search(line)
+            if not m or m.group(3) == "-done":
+                continue
+            kind = m.group(2).lower()
+            out[kind] = out.get(kind, 0) + int(_shape_bytes(m.group(1)) * m_c)
+    return out
+
+
+def batch_axes_for(specs: dict) -> dict:
+    """Logical axes of the input batch."""
+    ax = {}
+    for k, v in specs.items():
+        if v.ndim == 2:
+            ax[k] = ("batch", None)
+        elif v.ndim == 3:
+            ax[k] = ("batch", None, "act_embed")
+        else:
+            ax[k] = tuple([None] * v.ndim)
+    return ax
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               unroll: bool = False, overrides: dict | None = None,
+               dp: int = 16, tp: int = 16, profile: str = "auto",
+               dp_shard_map: bool = False):
+    """Lower + compile one cell; returns the result record.
+
+    unroll=True lowers without layer scans (exact HLO cost accounting) and
+    forces microbatches=1; used for the §Perf hillclimb cells.
+    overrides: dataclasses.replace overrides applied to the config (the
+    hillclimb loop's change knob)."""
+    import dataclasses
+
+    cfg = configs.get(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False, microbatches=1)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, reason = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    shape = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, dp=dp, tp=tp)
+    resolver = Resolver(mesh, profile=profile)
+    n_chips = mesh.devices.size
+
+    key = jax.random.PRNGKey(0)
+    captured = {}
+
+    def init_fn(k):
+        p, a = M.init_model(k, cfg)
+        captured["axes"] = a
+        return p
+
+    params_struct = jax.eval_shape(init_fn, key)
+    params_axes = captured["axes"]
+
+    specs = M.input_specs(cfg, shape_name, batch=shape["batch"], seq=shape["seq"])
+    batch_shardings = map_with_axes(
+        lambda v, ax: resolver.sharding_for(v.shape, ax),
+        specs, batch_axes_for(specs))
+
+    t0 = time.time()
+    with use_resolver(resolver), mesh:
+        if shape["kind"] == "train":
+            state_struct = jax.eval_shape(train_loop.init_state, params_struct)
+            state_axes = train_loop.state_axes(params_axes)
+            state_shardings = resolver.tree_shardings(state_struct, state_axes)
+            step_fn = train_loop.make_train_step(
+                cfg, dp_shard_map_mesh=mesh if dp_shard_map else None)
+            # out_shardings pins the returned state to the input sharding —
+            # the step is a fixed point (state feeds back), and without the
+            # pin XLA may emit re-sharded outputs and silently defer the
+            # gradient all-reduce out of the step (observed: 4 B of
+            # collectives for a pure-DP cell).
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_shardings, batch_shardings),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_struct, specs)
+        elif shape["kind"] == "prefill":
+            def pf(params, batch):
+                return M.prefill(params, cfg, batch)
+
+            param_shardings = resolver.tree_shardings(params_struct, params_axes)
+            jitted = jax.jit(pf, in_shardings=(param_shardings, batch_shardings))
+            lowered = jitted.lower(params_struct, specs)
+        else:  # decode
+            def dec(params, caches, batch):
+                return M.decode_step(params, cfg, caches, batch)
+
+            cache_struct = M.cache_specs(cfg, shape["batch"], shape["seq"])
+            cache_shardings = resolver.tree_shardings(
+                cache_struct, M.cache_axes(cfg))
+            param_shardings = resolver.tree_shardings(params_struct, params_axes)
+            jitted = jax.jit(
+                dec,
+                in_shardings=(param_shardings, cache_shardings, batch_shardings),
+                out_shardings=(None, cache_shardings),  # cache feeds back
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_struct, cache_struct, specs)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_periods = cfg.n_layers // len(cfg.block_pattern)
+    trip = (n_periods * max(cfg.microbatches, 1)
+            if shape["kind"] == "train" else n_periods)
+    if unroll:
+        trip = 1
+    coll = collective_bytes(compiled.as_text(), loop_trip_factor=trip)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(sum(coll.values()))
+
+    n_tokens = shape["batch"] * shape["seq"] if shape["kind"] == "train" else (
+        shape["batch"] * shape["seq"] if shape["kind"] == "prefill"
+        else shape["batch"])
+    mflops = model_flops(cfg, n_tokens, train=shape["kind"] == "train")
+
+    terms = {
+        "compute_s": flops_dev / PEAK_BF16,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+
+    # analytic (first-principles) terms — primary for scanned lowerings,
+    # cross-check for unrolled ones (launch/costs.py has the formulas)
+    moe_ep = bool(cfg.moe and cfg.moe.e_pad % tp == 0)
+    ac = cell_cost(arch, shape_name, multi_pod=multi_pod, dp=dp, tp=tp,
+                   profile=profile, microbatches=cfg.microbatches,
+                   moe_ep=moe_ep, cfg=cfg)
+    analytic = {
+        "compute_s": ac.flops_device / PEAK_BF16,
+        "memory_s": ac.hbm_bytes_device / HBM_BW,
+        "collective_s": ac.coll_bytes_device / ICI_BW,
+        "notes": ac.notes,
+    }
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collectives": coll,
+        },
+        "memory_analysis": {
+            k: getattr(mem, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)
+        },
+        "model_flops_total": mflops,
+        "model_flops_per_device": mflops / n_chips,
+        "useful_flops_ratio": (mflops / n_chips) / flops_dev if flops_dev else None,
+        "roofline_terms_s": terms,
+        "analytic_terms_s": analytic,
+        "unrolled": unroll,
+        "bottleneck": bottleneck,
+        "params_total": cfg.param_count(),
+        "params_active": active_params(cfg),
+        "knobs": {"dp": dp, "tp": tp, "profile": profile,
+                  "microbatches": cfg.microbatches},
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="lower without layer scans (exact HLO accounting)")
+    ap.add_argument("--dp", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--profile", default="auto", choices=["auto", "dp_only"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--moe-pad", type=int, default=0,
+                    help="pad the expert stack to this bank count (EP)")
+    ap.add_argument("--remat", default="", choices=["", "none", "full", "dots", "names"])
+    ap.add_argument("--seq-chunk", type=int, default=0)
+    ap.add_argument("--dp-shard-map", action="store_true",
+                    help="manual-DP grads via shard_map (needs --profile dp_only)")
+    ap.add_argument("--tag", default="", help="variant tag for the artifact")
+    ap.add_argument("--tuned", action="store_true",
+                    help="apply the §Perf-winning knobs from configs.TUNED")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.all_arch_names():
+            for shape in configs.SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    outdir = os.path.join(args.out, mesh_tag)
+    os.makedirs(outdir, exist_ok=True)
+
+    failures = 0
+    for arch, shape in cells:
+        suffix = "__unrolled" if args.unroll else ""
+        if args.tag:
+            suffix += f"__hc_{args.tag}"
+        path = os.path.join(outdir, f"{arch}__{shape}{suffix}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {arch} x {shape}")
+            continue
+        print(f"[dryrun] {arch} x {shape} on {mesh_tag} ...", flush=True)
+        if args.tuned and arch in configs.TUNED:
+            t = configs.TUNED[arch]
+            args.dp = t.get("dp", args.dp)
+            args.tp = t.get("tp", args.tp)
+            args.profile = t.get("profile", args.profile)
+            args.microbatches = t.get("microbatches", args.microbatches)
+            args.moe_pad = t.get("moe_pad", args.moe_pad)
+            args.seq_chunk = t.get("seq_chunk", args.seq_chunk)
+            args.dp_shard_map = t.get("dp_shard_map", args.dp_shard_map)
+        overrides = {}
+        if args.microbatches:
+            overrides["microbatches"] = args.microbatches
+        if args.remat:
+            overrides["remat"] = args.remat
+        if args.seq_chunk:
+            overrides["seq_chunk"] = args.seq_chunk
+        if args.moe_pad:
+            import dataclasses as _dc
+
+            base_moe = configs.get(arch).moe
+            overrides["moe"] = base_moe._replace(n_padded_experts=args.moe_pad)
+        try:
+            rec = build_cell(arch, shape, multi_pod=args.multi_pod,
+                             unroll=args.unroll, overrides=overrides,
+                             dp=args.dp, tp=args.tp, profile=args.profile,
+                             dp_shard_map=args.dp_shard_map)
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            failures += 1
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if "error" in rec:
+            print(f"  FAILED: {rec['error'].splitlines()[0]}")
+        elif "skipped" in rec:
+            print(f"  skipped: {rec['skipped']}")
+        else:
+            t = rec["roofline_terms_s"]
+            print(f"  ok ({rec['compile_s']}s compile) "
+                  f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+                  f"collective={t['collective_s']:.3e}s -> {rec['bottleneck']}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Multi-head / grouped-query attention with RoPE, chunked (memory-bounded)
+softmax, and KV-cache decode.
+
+Three execution paths:
+- ``full``     : materialized (B, H, S, S) scores — small sequences only.
+- ``chunked``  : lax.map over query chunks; each chunk sees the full K/V but
+                 only a (chunk, S) score tile lives at once. Memory-bounded
+                 flash-style schedule in pure JAX (XLA fuses the inner loop);
+                 the default for S > 2048.
+- ``decode``   : one query position against a (possibly seq-sharded) cache.
+
+GQA: kv_heads < n_heads; queries are grouped. head_dim may differ from
+d_model / n_heads (gemma-7b uses 256).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_apply, dense_init
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (bf16-safe)
+
+
+def attn_init(key, d_model: int, n_heads: int, kv_heads: int, head_dim: int):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["q"], a["q"] = dense_init(ks[0], d_model, n_heads * head_dim, "embed", "heads")
+    p["k"], a["k"] = dense_init(ks[1], d_model, kv_heads * head_dim, "embed", "kv")
+    p["v"], a["v"] = dense_init(ks[2], d_model, kv_heads * head_dim, "embed", "kv")
+    p["o"], a["o"] = dense_init(ks[3], n_heads * head_dim, d_model, "heads", "embed")
+    return p, a
+
+
+def _project_qkv(p, x, n_heads, kv_heads, head_dim, positions, rope_theta):
+    B, S, _ = x.shape
+    q = dense_apply(p["q"], x).reshape(B, S, n_heads, head_dim)
+    k = dense_apply(p["k"], x).reshape(B, S, kv_heads, head_dim)
+    v = dense_apply(p["v"], x).reshape(B, S, kv_heads, head_dim)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0):
+    """q: (B, Sq, H, d); k/v: (B, Sk, KV, d) -> (B, Sq, H, d)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Sq, KV, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where((ki <= qi)[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention(
+    p,
+    x: jnp.ndarray,             # (B, S, d_model)
+    *,
+    n_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    rope_theta: float | None = 10000.0,
+    chunk_q: int = 1024,
+    kv_override: tuple | None = None,   # (k, v) for cross-attention
+) -> jnp.ndarray:
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, kv_heads, head_dim, positions, rope_theta)
+    if kv_override is not None:
+        k, v = kv_override
+
+    if S <= chunk_q or S % chunk_q != 0:
+        out = _sdpa(q, k, v, causal=causal)
+    else:
+        n_chunks = S // chunk_q
+        qc = q.reshape(B, n_chunks, chunk_q, n_heads, head_dim)
+
+        def one_chunk(args):
+            qi, idx = args
+            return _sdpa(qi, k, v, causal=causal, q_offset=idx * chunk_q)
+
+        out = jax.lax.map(one_chunk, (qc.transpose(1, 0, 2, 3, 4),
+                                      jnp.arange(n_chunks)))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, n_heads, head_dim)
+
+    return dense_apply(p["o"], out.reshape(B, S, n_heads * head_dim))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache prefill / decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray      # (B, S_max, kv_heads, head_dim)
+    v: jnp.ndarray
+    pos: jnp.ndarray    # (B,) int32 — next write position per row (slots may
+                        # be at different depths: continuous batching)
+
+
+def cache_init(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    z = jnp.zeros((batch, max_seq, kv_heads, head_dim), dtype)
+    return KVCache(z, z, jnp.zeros((batch,), jnp.int32))
+
+
+def cache_axes() -> KVCache:
+    """Logical axes of a cache entry (resolver shards kv or seq)."""
+    return KVCache(
+        k=("batch", "kvseq", "kv_cache", None),
+        v=("batch", "kvseq", "kv_cache", None),
+        pos=("batch",),
+    )
+
+
+def attention_prefill(p, x, cache: KVCache, *, n_heads, kv_heads, head_dim,
+                      rope_theta=10000.0, chunk_q: int = 1024):
+    """Causal prefill: returns (out, updated cache with S entries)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, kv_heads, head_dim, positions, rope_theta)
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+    out = _sdpa(q, k, v, causal=True) if S <= chunk_q else attention(
+        p, x, n_heads=n_heads, kv_heads=kv_heads, head_dim=head_dim,
+        causal=True, rope_theta=rope_theta, chunk_q=chunk_q,
+    )
+    if S <= chunk_q:
+        out = dense_apply(p["o"], out.reshape(B, S, n_heads * head_dim))
+    return out, KVCache(new_k, new_v, jnp.full((B,), S, jnp.int32))
+
+
+def attention_decode(p, x, cache: KVCache, *, n_heads, kv_heads, head_dim,
+                     rope_theta=10000.0):
+    """One-token decode against the cache. x: (B, 1, d_model).
+
+    Positions are per-row (continuous batching: every slot sits at its own
+    depth); the cache write is a per-row scatter."""
+    B = x.shape[0]
+    positions = cache.pos[:, None]                          # (B, 1)
+    q, k, v = _project_qkv(p, x, n_heads, kv_heads, head_dim, positions, rope_theta)
+
+    rows = jnp.arange(B)
+    k_cache = cache.k.at[rows, cache.pos].set(k[:, 0].astype(cache.k.dtype))
+    v_cache = cache.v.at[rows, cache.pos].set(v[:, 0].astype(cache.v.dtype))
+
+    S_max = cache.k.shape[1]
+    mask = jnp.arange(S_max)[None, :] <= cache.pos[:, None]  # (B, S_max)
+    group = n_heads // kv_heads
+    scale = 1.0 / math.sqrt(head_dim)
+
+    qg = q.reshape(B, kv_heads, group, head_dim)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    return (
+        dense_apply(p["o"], out),
+        KVCache(k_cache, v_cache, cache.pos + 1),
+    )

@@ -1,0 +1,31 @@
+"""Feed-forward variants: MLP (gelu/relu), SwiGLU, GeGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import activation, dense_apply, dense_init
+
+GATED = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def ffn_init(key, d_model: int, d_ff: int, kind: str):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    if kind in GATED:
+        p["wg"], a["wg"] = dense_init(ks[0], d_model, d_ff, "embed", "mlp")
+        p["wu"], a["wu"] = dense_init(ks[1], d_model, d_ff, "embed", "mlp")
+        p["wd"], a["wd"] = dense_init(ks[2], d_ff, d_model, "mlp", "embed")
+    else:
+        p["wu"], a["wu"] = dense_init(ks[0], d_model, d_ff, "embed", "mlp")
+        p["wd"], a["wd"] = dense_init(ks[1], d_ff, d_model, "mlp", "embed")
+    return p, a
+
+
+def ffn_apply(p, x, kind: str):
+    if kind in GATED:
+        act = activation(GATED[kind])
+        h = act(dense_apply(p["wg"], x)) * dense_apply(p["wu"], x)
+    else:
+        h = activation(kind)(dense_apply(p["wu"], x))
+    return dense_apply(p["wd"], h)

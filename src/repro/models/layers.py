@@ -1,0 +1,93 @@
+"""Shared building blocks for the LM substrate.
+
+Every parameter is created together with its *logical axes* (a tuple of
+names like ('embed', 'mlp')); the sharding resolver maps logical axes to
+mesh axes with divisibility-aware fallbacks (sharding/resolver.py). Params
+and axes are parallel pytrees.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Axes = dict
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: str, out_ax: str,
+               dtype=jnp.float32):
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) / math.sqrt(in_dim)
+    return {"w": w}, {"w": (in_ax, out_ax)}
+
+
+def dense_apply(p, x, compute_dtype=jnp.bfloat16):
+    return x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+
+
+def norm_init(dim: int, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    a = {"scale": (None,)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+        a["bias"] = (None,)
+    return p, a
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y + p.get("bias", 0.0)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, dim), dtype) * 0.02
+    return {"emb": w}, {"emb": ("vocab", "embed")}
+
+
+def embed_apply(p, tokens, compute_dtype=jnp.bfloat16):
+    return p["emb"].astype(compute_dtype)[tokens]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                   # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+    }[name]
+
+
+def shard_hint(x, spec_fn):
+    """Apply a sharding constraint if a resolver is active (no-op otherwise)."""
+    if spec_fn is None:
+        return x
+    return spec_fn(x)

@@ -1,0 +1,341 @@
+"""ArchConfig + full-model factories: init, train_step, serve steps, specs.
+
+This is the public API the launcher, dry-run, examples, and tests all use:
+
+    cfg    = configs.get("internlm2-20b")
+    bundle = model.build(cfg)            # init / loss / train_step / serve
+    specs  = model.input_specs(cfg, shape)   # ShapeDtypeStructs for dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.resolver import constrain
+from . import attention as attn_mod
+from . import ssm as ssm_mod
+from . import transformer, xlstm as xlstm_mod
+from .layers import embed_apply, embed_init, norm_apply, norm_init
+from .moe import MoEConfig
+from .ssm import MambaConfig
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    act: str = "swiglu"
+    norm: str = "rmsnorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    block_pattern: tuple = ("attn",)
+    moe: MoEConfig | None = None
+    mamba: MambaConfig | None = None
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: str = "none"      # none | vision | audio (stub embeddings)
+    sub_quadratic: bool = False  # eligible for long_500k
+    # execution knobs
+    remat: str = "full"
+    microbatches: int = 1
+    chunk_q: int = 1024
+    scan_layers: bool = True   # False: unroll periods (exact HLO accounting)
+    seq_chunk: int = 0         # >0: remat recurrent scans every seq_chunk
+                               # steps (saves carries 1/seq_chunk as often;
+                               # §Perf: cuts xlstm/mamba backward residuals)
+    param_dtype: Any = jnp.float32
+    source: str = ""            # provenance note ([arXiv/hf; tier])
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab, 256)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (sanity checks in tests)."""
+        d, hd = self.d_model, self.head_dim
+        total = self.padded_vocab * d  # embedding
+        if not self.tie_embeddings:
+            total += self.padded_vocab * d
+        n_dec = self.n_layers
+        layers = list(range(n_dec))
+        for i in layers:
+            kind = self.block_pattern[i % len(self.block_pattern)]
+            if kind == "attn":
+                total += d * hd * (self.n_heads + 2 * self.kv_heads) + \
+                    self.n_heads * hd * d
+            elif kind == "mamba":
+                m = self.mamba
+                dtr = -(-d // 16)
+                total += d * 2 * m.d_inner + m.d_conv * m.d_inner + m.d_inner
+                total += m.d_inner * (dtr + 2 * m.d_state) + dtr * m.d_inner
+                total += m.d_inner * (2 + m.d_state) + m.d_inner * d
+            elif kind == "mlstm":
+                du = 2 * d
+                total += d * 2 * du + 4 * du + du * du * 4 + du * 2 * self.n_heads
+                total += du * d + du
+            elif kind == "slstm":
+                hd_s = d // self.n_heads
+                ff = int(4 / 3 * d)
+                total += d * 4 * d + self.n_heads * hd_s * 4 * hd_s + 4 * d
+                total += d + 2 * d * ff + ff * d
+            if transformer._use_moe(self, i):
+                m = self.moe
+                total += d * m.n_experts
+                total += m.n_experts * 3 * d * m.expert_d_ff
+                if m.shared_d_ff:
+                    total += 3 * d * m.shared_d_ff
+            elif self.d_ff > 0:
+                mult = 3 if self.act in ("swiglu", "geglu") else 2
+                total += mult * d * self.d_ff
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ArchConfig):
+    """Returns (params, axes) — parallel pytrees."""
+    ks = jax.random.split(key, 6)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embed_init(ks[0], cfg.padded_vocab, cfg.d_model)
+    params["final_norm"], axes["final_norm"] = norm_init(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        from .layers import dense_init
+
+        params["head"], axes["head"] = dense_init(
+            ks[1], cfg.d_model, cfg.padded_vocab, "embed", "vocab")
+
+    params["decoder"], axes["decoder"] = transformer.stack_init(
+        ks[2], cfg, cfg.n_layers, cross=cfg.enc_dec)
+    if cfg.enc_dec:
+        params["encoder"], axes["encoder"] = transformer.stack_init(
+            ks[3], cfg, cfg.n_enc_layers or cfg.n_layers, cross=False)
+        params["enc_norm"], axes["enc_norm"] = norm_init(cfg.d_model, cfg.norm)
+    return params, axes
+
+
+def _logits(params, cfg, h):
+    if cfg.tie_embeddings:
+        return h.astype(jnp.bfloat16) @ params["embed"]["emb"].astype(jnp.bfloat16).T
+    return h.astype(jnp.bfloat16) @ params["head"]["w"].astype(jnp.bfloat16)
+
+
+def _embed_inputs(params, cfg, batch):
+    """Token ids or precomputed frontend embeddings -> (B, S, d)."""
+    if "embeddings" in batch:      # vlm / audio-encoder stub path
+        return batch["embeddings"].astype(jnp.bfloat16)
+    return embed_apply(params["embed"], batch["tokens"])
+
+
+def forward(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    """Training forward -> (logits (B, S, padded_vocab), aux_loss)."""
+    if cfg.enc_dec:
+        src = batch["src_embeddings"].astype(jnp.bfloat16)
+        enc, _, _ = transformer.stack_apply(
+            params["encoder"], src, cfg, mode="train", causal=False,
+            remat=remat)
+        enc = norm_apply(params["enc_norm"], enc, cfg.norm)
+        h = embed_apply(params["embed"], batch["tokens"])
+        h = constrain(h, ("batch", None, "act_embed"))
+        # cross-attention K/V computed per decoder layer from enc output; we
+        # share one projection per layer via kv_override of enc hidden states
+        # projected inside the block (encoder hidden reused as K=V source).
+        B, Se, d = enc.shape
+        kv = enc.reshape(B, Se, cfg.kv_heads, d // cfg.kv_heads)
+        kv = kv[..., : cfg.head_dim]
+        cross_kv = (kv, kv)
+        n_periods = cfg.n_layers // len(cfg.block_pattern)
+        cross_stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), cross_kv)
+        h, _, aux = transformer.stack_apply(
+            params["decoder"], h, cfg, mode="train", cross_kv=cross_stacked,
+            remat=remat)
+    else:
+        h = _embed_inputs(params, cfg, batch)
+        h = constrain(h, ("batch", None, "act_embed"))
+        h, _, aux = transformer.stack_apply(
+            params["decoder"], h, cfg, mode="train", remat=remat)
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _logits(params, cfg, h)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    """Next-token cross-entropy (padded-vocab masked) + MoE aux loss."""
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab,), -1e9, jnp.float32)
+        logits = logits.at[..., cfg.vocab :].set(neg)
+    logp = jax.nn.log_softmax(logits, -1)
+    tok_ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = -(tok_ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    """Stacked (n_periods, ...) cache pytree for decode."""
+    plen = len(cfg.block_pattern)
+    n_periods = cfg.n_layers // plen
+
+    subs = []
+    for j in range(plen):
+        kind = cfg.block_pattern[j]
+        if kind == "attn":
+            c = attn_mod.cache_init(batch, max_seq, cfg.kv_heads, cfg.head_dim)
+        elif kind == "mamba":
+            c = ssm_mod.mamba_cache_init(batch, cfg.mamba)
+        elif kind == "mlstm":
+            c = xlstm_mod.mlstm_cache_init(batch, cfg.d_model, cfg.n_heads)
+        else:
+            c = xlstm_mod.slstm_cache_init(batch, cfg.d_model)
+        subs.append(c)
+    one_period = tuple(subs)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape).copy()
+        if hasattr(x, "shape") else x,
+        one_period,
+    )
+
+
+def cache_axes(cfg: ArchConfig):
+    subs = []
+    for j in range(len(cfg.block_pattern)):
+        kind = cfg.block_pattern[j]
+        if kind == "attn":
+            c = attn_mod.cache_axes()
+        elif kind == "mamba":
+            c = ssm_mod.mamba_cache_axes()
+        elif kind == "mlstm":
+            c = xlstm_mod.mlstm_cache_axes()
+        else:
+            c = xlstm_mod.slstm_cache_axes()
+        subs.append(c)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax),
+        tuple(subs),
+        is_leaf=is_ax,
+    )
+
+
+def decode_step(params, cfg: ArchConfig, caches, batch):
+    """One-token decode. batch: {'tokens': (B, 1)} or {'embeddings': (B,1,d)}
+    (+ 'enc_out' for enc-dec) -> (logits (B, vocab), new caches)."""
+    h = _embed_inputs(params, cfg, batch)
+    cross_kv = None
+    if cfg.enc_dec:
+        enc = batch["enc_out"].astype(jnp.bfloat16)
+        B, Se, d = enc.shape
+        kv = enc.reshape(B, Se, cfg.kv_heads, d // cfg.kv_heads)[..., : cfg.head_dim]
+        n_periods = cfg.n_layers // len(cfg.block_pattern)
+        cross_kv = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), (kv, kv))
+    h, caches, _ = transformer.stack_apply(
+        params["decoder"], h, cfg, mode="decode", caches=caches,
+        cross_kv=cross_kv, remat=False)
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _logits(params, cfg, h)[:, 0, : cfg.vocab]
+    return logits.astype(jnp.float32), caches
+
+
+def prefill(params, cfg: ArchConfig, batch, max_seq: int | None = None):
+    """Prefill the cache from a prompt -> (last-token logits, caches)."""
+    if cfg.enc_dec:
+        src = batch["src_embeddings"].astype(jnp.bfloat16)
+        enc, _, _ = transformer.stack_apply(
+            params["encoder"], src, cfg, mode="train", causal=False, remat=False)
+        enc = norm_apply(params["enc_norm"], enc, cfg.norm)
+        batch = dict(batch, enc_out=enc)
+    h = _embed_inputs(params, cfg, batch)
+    B, S = h.shape[:2]
+    caches = init_cache(cfg, B, max_seq or S)
+    cross_kv = None
+    if cfg.enc_dec:
+        enc = batch["enc_out"]
+        d = enc.shape[-1]
+        kv = enc.reshape(B, -1, cfg.kv_heads, d // cfg.kv_heads)[..., : cfg.head_dim]
+        n_periods = cfg.n_layers // len(cfg.block_pattern)
+        cross_kv = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), (kv, kv))
+    h, caches, _ = transformer.stack_apply(
+        params["decoder"], h, cfg, mode="prefill", caches=caches,
+        cross_kv=cross_kv, remat=False)
+    h = norm_apply(params["final_norm"], h[:, -1:], cfg.norm)
+    logits = _logits(params, cfg, h)[:, 0, : cfg.vocab]
+    return logits.astype(jnp.float32), caches
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str, *, batch: int, seq: int):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    f = jax.ShapeDtypeStruct
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    d = cfg.d_model
+
+    if shape_name.startswith("train"):
+        if cfg.enc_dec:
+            return {
+                "src_embeddings": f((batch, seq, d), bf16),
+                "tokens": f((batch, seq), i32),
+                "labels": f((batch, seq), i32),
+            }
+        if cfg.frontend in ("vision", "audio"):
+            return {
+                "embeddings": f((batch, seq, d), bf16),
+                "labels": f((batch, seq), i32),
+            }
+        return {"tokens": f((batch, seq), i32), "labels": f((batch, seq), i32)}
+
+    if shape_name.startswith("prefill"):
+        if cfg.enc_dec:
+            return {
+                "src_embeddings": f((batch, seq, d), bf16),
+                "tokens": f((batch, seq), i32),
+            }
+        if cfg.frontend in ("vision", "audio"):
+            return {"embeddings": f((batch, seq, d), bf16)}
+        return {"tokens": f((batch, seq), i32)}
+
+    # decode shapes: one new token (text id) against a seq-long cache
+    spec = {"tokens": f((batch, 1), i32)}
+    if cfg.enc_dec:
+        spec["enc_out"] = f((batch, seq, d), bf16)
+    return spec
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    """ShapeDtypeStructs of the decode cache (for dry-run lowering)."""
+    live = init_cache  # reuse shapes via eval_shape (no allocation)
+    return jax.eval_shape(lambda: live(cfg, batch, max_seq))

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with capacity-bounded, sort-based dispatch.
+
+Paper-technique transfer (DESIGN.md §Arch-applicability): expert dispatch is
+address-event processing. Tokens are *events*; each expert's capacity buffer
+is a fixed-depth *queue* (the AEQ of core/aeq.py); overflowing events are
+dropped-and-counted exactly like AEQ overflow; and the routing table is a
+vector of *packed words* — (token_idx << RANK_BITS) | rank with an in-band
+invalid sentinel — the compressed AE encoding idea (Sec. 5.2) applied to
+routing metadata: 4 bytes/slot instead of a (token, expert, rank, valid)
+struct, 4x less traffic for the dispatch tables.
+
+Sharding: expert-stacked weights carry the 'experts' logical axis (EP); the
+resolver falls back to sharding the expert FFN width when n_experts doesn't
+divide the mesh axis (e.g. qwen2's 60 experts on a 16-way axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .ffn import ffn_apply, ffn_init
+from .layers import dense_apply, dense_init
+
+RANK_BITS = 3  # top-k <= 8
+INVALID_WORD = jnp.int32(-1)
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    shared_d_ff: int = 0          # 0 = no shared expert path
+    capacity_factor: float = 1.25
+    every_k_layers: int = 1       # MoE replaces dense FFN every k-th layer
+    n_padded_experts: int = 0     # pad expert stack to the mesh "bank" count
+                                  # (e.g. 60 -> 64 so EP shards 16-way) — the
+                                  # AEQ interlacing idea: size the queue array
+                                  # to the physical banks (paper Figs. 4-5)
+
+    @property
+    def e_pad(self) -> int:
+        return self.n_padded_experts or self.n_experts
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, kind: str = "swiglu"):
+    ks = jax.random.split(key, 6)
+    E, ff = cfg.e_pad, cfg.expert_d_ff
+    p, a = {}, {}
+    p["router"], a["router"] = dense_init(ks[0], d_model, E, "embed", None)
+
+    def stack(k2, shape_in, shape_out, ax_in, ax_out):
+        w = (jax.random.normal(k2, (E, shape_in, shape_out), jnp.float32)
+             / jnp.sqrt(shape_in))
+        return {"w": w}, {"w": ("experts", ax_in, ax_out)}
+
+    p["wg"], a["wg"] = stack(ks[1], d_model, ff, "embed", "mlp")
+    p["wu"], a["wu"] = stack(ks[2], d_model, ff, "embed", "mlp")
+    p["wd"], a["wd"] = stack(ks[3], ff, d_model, "mlp", "embed")
+    if cfg.shared_d_ff:
+        p["shared"], a["shared"] = ffn_init(ks[4], d_model, cfg.shared_d_ff, kind)
+    return p, a
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def route(router_logits: jnp.ndarray, cfg: MoEConfig, cap: int):
+    """Top-k routing -> packed per-slot routing words + per-slot gates.
+
+    Returns (words (E*cap,), gates (E*cap,), aux_loss, dropped).
+    words[s] = (token << RANK_BITS) | rank, or -1 for an empty slot.
+    """
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), -1)
+    gate_vals, eidx = jax.lax.top_k(probs, cfg.top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    flat_e = eidx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(T * cfg.top_k, dtype=jnp.int32) - seg_start[sorted_e]
+    keep = pos < cap
+
+    token = (order // cfg.top_k).astype(jnp.int32)
+    rank = (order % cfg.top_k).astype(jnp.int32)
+    packed = (token << RANK_BITS) | rank                        # compressed word
+
+    Ep = cfg.e_pad  # padded experts never win top_k; their slots stay empty
+    slot = jnp.where(keep, sorted_e * cap + pos, Ep * cap)      # Ep*cap == drop
+    words = jnp.full((Ep * cap + 1,), INVALID_WORD)
+    words = words.at[slot].set(jnp.where(keep, packed, INVALID_WORD))[:-1]
+
+    gslot = jnp.zeros((Ep * cap + 1,), jnp.float32)
+    gslot = gslot.at[slot].set(
+        jnp.where(keep, gate_vals.reshape(-1)[order], 0.0))[:-1]
+
+    # switch-style load-balance auxiliary loss (over the REAL experts;
+    # padded bank slots carry ~zero probability mass)
+    me = probs.mean(0)                                          # (E,)
+    ce = jnp.zeros((E,)).at[flat_e].add(1.0) / (T * cfg.top_k)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    dropped = (~keep).sum()
+    return words, gslot, aux, dropped
+
+
+def moe_apply(p, x: jnp.ndarray, cfg: MoEConfig, kind: str = "swiglu"):
+    """x: (B, S, d) -> (out, aux_loss). Event-queue dispatch + expert FFNs."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    cap = capacity(T, cfg)
+
+    logits = dense_apply(p["router"], xt).astype(jnp.float32)
+    if cfg.e_pad > cfg.n_experts:
+        # padded bank experts must never win routing
+        logits = logits.at[:, cfg.n_experts :].set(-1e9)
+    words, gates, aux, _dropped = route(logits, cfg, cap)
+
+    tok = words >> RANK_BITS
+    live = (words >= 0)
+    buf = xt[jnp.maximum(tok, 0)] * live[:, None].astype(xt.dtype)
+    buf = buf.reshape(cfg.e_pad, cap, d)
+
+    cd = jnp.bfloat16
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf.astype(cd),
+                               p["wg"]["w"].astype(cd)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf.astype(cd), p["wu"]["w"].astype(cd))
+    eout = jnp.einsum("ecf,efd->ecd", h, p["wd"]["w"].astype(cd))
+    eout = eout.reshape(cfg.e_pad * cap, d)
+
+    out = jnp.zeros((T + 1, d), eout.dtype)
+    out = out.at[jnp.where(live, tok, T)].add(eout * gates[:, None].astype(cd))
+    out = out[:T]
+
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], xt, kind)
+    return out.reshape(B, S, d).astype(x.dtype), aux

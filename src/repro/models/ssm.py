@@ -1,0 +1,154 @@
+"""Mamba-style selective state-space block (Jamba's sequence mixer).
+
+Baseline implementation favors *correctness + compile-size*: the selective
+scan runs as a sequential ``lax.scan`` over time with an O(B * d_inner * N)
+carry — no (T, d_inner, N) tensor is ever materialized (that would be TBs at
+Jamba scale). The chunked-parallel formulation is a §Perf iteration.
+
+Decode keeps O(1) state: a rolling conv window + the SSM state — this is why
+Jamba runs the ``long_500k`` shape (DESIGN.md §Long-context policy).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_apply, dense_init
+
+
+class MambaConfig(NamedTuple):
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv - 1, d_inner) rolling input window
+    h: jnp.ndarray      # (B, d_inner, d_state) SSM state
+
+
+def mamba_init(key, d_model: int, cfg: MambaConfig):
+    di, N, K = cfg.d_inner, cfg.d_state, cfg.d_conv
+    dt_rank = cfg.dt_rank or -(-d_model // 16)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["in_proj"], a["in_proj"] = dense_init(ks[0], d_model, 2 * di, "embed", "mlp")
+    p["conv_w"] = jax.random.normal(ks[1], (K, di), jnp.float32) * 0.1
+    a["conv_w"] = (None, "mlp")
+    p["conv_b"] = jnp.zeros((di,), jnp.float32)
+    a["conv_b"] = ("mlp",)
+    p["x_proj"], a["x_proj"] = dense_init(ks[2], di, dt_rank + 2 * N, "mlp", None)
+    p["dt_proj"], a["dt_proj"] = dense_init(ks[3], dt_rank, di, None, "mlp")
+    p["dt_bias"] = jnp.zeros((di,), jnp.float32)
+    a["dt_bias"] = ("mlp",)
+    # S4D-real initialization of A
+    p["A_log"] = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, N)).copy())
+    a["A_log"] = ("mlp", None)
+    p["D"] = jnp.ones((di,), jnp.float32)
+    a["D"] = ("mlp",)
+    p["out_proj"], a["out_proj"] = dense_init(ks[4], di, d_model, "mlp", "embed")
+    return p, a
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, di), w (K, di) -> (B, S, di)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, j : j + x.shape[1]] * w[j] for j in range(K))
+    return out + b
+
+
+def _ssm_params(p, xc, cfg: MambaConfig, d_model: int):
+    dt_rank = cfg.dt_rank or -(-d_model // 16)
+    proj = dense_apply(p["x_proj"], xc).astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], -1)
+    dt = jax.nn.softplus(
+        dense_apply(p["dt_proj"], dt).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (di, N)
+    return dt, Bc, Cc, A
+
+
+def mamba_apply(p, x: jnp.ndarray, cfg: MambaConfig, *, want_state: bool = False,
+                seq_chunk: int = 0):
+    """Training/prefill forward. x: (B, S, d_model) -> (B, S, d_model) or,
+    with want_state, (y, MambaCache) so decode continues from the prefix."""
+    B, S, d_model = x.shape
+    xz = dense_apply(p["in_proj"], x)
+    xc_pre, z = jnp.split(xz, 2, -1)
+    xc = jax.nn.silu(_causal_conv(xc_pre, p["conv_w"], p["conv_b"]))
+
+    dt, Bc, Cc, A = _ssm_params(p, xc, cfg, d_model)
+
+    def step(h, inp):
+        xt, dt_t, B_t, C_t = inp                     # (B,di),(B,di),(B,N),(B,N)
+        Ab = jnp.exp(dt_t[..., None] * A)            # (B, di, N)
+        h = Ab * h + (dt_t * xt)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.d_state), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    S_len = xs[0].shape[0]
+    if seq_chunk and S_len % seq_chunk == 0 and S_len > seq_chunk:
+
+        @jax.checkpoint
+        def chunk_step(carry, xs_chunk):
+            return jax.lax.scan(step, carry, xs_chunk)
+
+        xs_c = jax.tree.map(
+            lambda t: t.reshape((S_len // seq_chunk, seq_chunk) + t.shape[1:]),
+            xs)
+        h_last, ys = jax.lax.scan(chunk_step, h0, xs_c)
+        ys = ys.reshape((S_len,) + ys.shape[2:])
+    else:
+        h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)
+    if want_state:
+        K = cfg.d_conv
+        pad = jnp.pad(xc_pre, ((0, 0), (K - 1, 0), (0, 0)))
+        cache = MambaCache(
+            conv=pad[:, -(K - 1):].astype(jnp.float32), h=h_last)
+        return out, cache
+    return out
+
+
+def mamba_cache_init(batch: int, cfg: MambaConfig, dtype=jnp.float32) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((batch, cfg.d_inner, cfg.d_state), dtype),
+    )
+
+
+def mamba_cache_axes() -> MambaCache:
+    return MambaCache(conv=("batch", None, "mlp"), h=("batch", "mlp", None))
+
+
+def mamba_decode(p, x: jnp.ndarray, cache: MambaCache, cfg: MambaConfig):
+    """One-token decode. x: (B, 1, d_model) -> (out, new cache)."""
+    B, _, d_model = x.shape
+    xz = dense_apply(p["in_proj"], x[:, 0])
+    xc, z = jnp.split(xz, 2, -1)
+
+    window = jnp.concatenate(
+        [cache.conv, xc.astype(cache.conv.dtype)[:, None]], axis=1)  # (B, K, di)
+    conv_out = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(conv_out)
+
+    dt, Bc, Cc, A = _ssm_params(p, xc, cfg, d_model)
+    Ab = jnp.exp(dt[..., None] * A)
+    h = Ab * cache.h + (dt * xc.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cc) + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)[:, None]
+    return out, MambaCache(conv=window[:, 1:], h=h)

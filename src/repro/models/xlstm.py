@@ -1,0 +1,255 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful-lite implementation of Beck et al. 2024 (arXiv:2405.04517):
+- mLSTM: per-head matrix memory C (hd x hd), exponential input gate,
+  sigmoid-in-log-space forget gate, max-stabilizer m; pre-up-projection
+  (factor 2), causal conv, learned skip, per-head group-norm, gated output.
+- sLSTM: scalar memory per unit with recurrent gate connections (block-
+  diagonal per head), followed by a gated (4/3-factor) projection.
+
+Both mixers run as exact sequential ``lax.scan`` recurrences — O(1) decode
+state (why xlstm-125m runs the ``long_500k`` shape). The chunkwise-parallel
+mLSTM form is a §Perf iteration (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_apply, dense_init, norm_apply, norm_init
+
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray    # (B, H, hd, hd) matrix memory
+    n: jnp.ndarray    # (B, H, hd) normalizer
+    m: jnp.ndarray    # (B, H) stabilizer
+    conv: jnp.ndarray  # (B, K-1, d_up) rolling conv window
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray    # (B, d)
+    n: jnp.ndarray    # (B, d)
+    h: jnp.ndarray    # (B, d)
+    m: jnp.ndarray    # (B, d)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int, proj_factor: int = 2,
+               d_conv: int = 4):
+    du = proj_factor * d_model
+    hd = du // n_heads
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["up"], a["up"] = dense_init(ks[0], d_model, 2 * du, "embed", "mlp")
+    p["conv_w"] = jax.random.normal(ks[1], (d_conv, du), jnp.float32) * 0.1
+    a["conv_w"] = (None, "mlp")
+    p["q"], a["q"] = dense_init(ks[2], du, du, "mlp", "heads")
+    p["k"], a["k"] = dense_init(ks[3], du, du, "mlp", "heads")
+    p["v"], a["v"] = dense_init(ks[4], du, du, "mlp", "heads")
+    p["ifg"], a["ifg"] = dense_init(ks[5], du, 2 * n_heads, "mlp", None)
+    p["skip"], a["skip"] = dense_init(ks[6], du, du, "mlp", "heads")
+    p["gn"], a["gn"] = norm_init(du)
+    p["down"], a["down"] = dense_init(ks[7], du, d_model, "heads", "embed")
+    return p, a
+
+
+def _mlstm_scan(q, k, v, i_raw, f_raw, C0, n0, m0, seq_chunk: int = 0):
+    """Exact recurrent mLSTM cell over time.
+
+    q/k/v: (B, S, H, hd); i_raw/f_raw: (B, S, H). Returns (h, (C, n, m)).
+    seq_chunk > 0: two-level scan with rematerialized chunks — the backward
+    stores the (B,H,hd,hd) matrix memory only every seq_chunk steps instead
+    of every step (a ~seq_chunk x cut in saved residuals for ~2x chunk
+    recompute; §Perf iteration).
+    """
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        log_f = -jax.nn.softplus(-ft)                 # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, it)            # (B, H)
+        fg = jnp.exp(log_f + m - m_new)[..., None, None]
+        ig = jnp.exp(it - m_new)[..., None, None]
+        kt = kt * scale
+        C = fg * C + ig * (vt[..., :, None] * kt[..., None, :])  # (B,H,hd,hd)
+        n = fg[..., 0] * n + ig[..., 0] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), jnp.exp(-m_new)
+        )[..., None]
+        return (C, n, m_new), num / den
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (q, k, v, i_raw, f_raw))
+    if seq_chunk and S % seq_chunk == 0 and S > seq_chunk:
+
+        @jax.checkpoint
+        def chunk_step(carry, xs_chunk):
+            return jax.lax.scan(step, carry, xs_chunk)
+
+        xs_c = jax.tree.map(
+            lambda t: t.reshape((S // seq_chunk, seq_chunk) + t.shape[1:]), xs)
+        (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs_c)
+        hs = hs.reshape((S,) + hs.shape[2:])
+    else:
+        (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (C, n, m)   # (B, S, H, hd)
+
+
+def mlstm_apply(p, x: jnp.ndarray, n_heads: int, *, cache: MLSTMCache | None = None,
+                d_conv: int = 4, want_state: bool = False, seq_chunk: int = 0):
+    """x: (B, S, d_model). With cache (decode), S == 1 and state carries over.
+    want_state (prefill): return the final recurrent state for decode."""
+    B, S, d_model = x.shape
+    up = dense_apply(p["up"], x)
+    h_pre, z = jnp.split(up, 2, -1)                       # (B, S, du) each
+    du = h_pre.shape[-1]
+    hd = du // n_heads
+
+    if cache is None:
+        pad = jnp.pad(h_pre, ((0, 0), (d_conv - 1, 0), (0, 0)))
+        conv_carry = pad[:, -(d_conv - 1):]
+    else:
+        pad = jnp.concatenate([cache.conv.astype(h_pre.dtype), h_pre], axis=1)
+        conv_carry = pad[:, -(d_conv - 1):]
+    conv = sum(pad[:, j : j + S] * p["conv_w"][j] for j in range(d_conv))
+    conv = jax.nn.silu(conv)
+
+    q = dense_apply(p["q"], conv).reshape(B, S, n_heads, hd)
+    k = dense_apply(p["k"], conv).reshape(B, S, n_heads, hd)
+    v = dense_apply(p["v"], h_pre).reshape(B, S, n_heads, hd)
+    ifg = dense_apply(p["ifg"], conv).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(ifg.reshape(B, S, 2, n_heads), 2, axis=2)
+    i_raw, f_raw = i_raw[:, :, 0], f_raw[:, :, 0]
+
+    if cache is None:
+        C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+        m0 = jnp.zeros((B, n_heads), jnp.float32)
+    else:
+        C0, n0, m0 = cache.C, cache.n, cache.m
+
+    h, (C, n, m) = _mlstm_scan(q, k, v, i_raw, f_raw, C0, n0, m0,
+                               seq_chunk=seq_chunk)
+    h = h.reshape(B, S, du).astype(x.dtype)
+    h = h + dense_apply(p["skip"], conv)
+    h = norm_apply(p["gn"], h)                     # (group norm simplified)
+    h = h * jax.nn.silu(z)
+    out = dense_apply(p["down"], h)
+    new_cache = None
+    if cache is not None or want_state:
+        new_cache = MLSTMCache(C=C, n=n, m=m,
+                               conv=conv_carry.astype(jnp.float32))
+    return out, new_cache
+
+
+def mlstm_cache_init(batch: int, d_model: int, n_heads: int,
+                     proj_factor: int = 2, d_conv: int = 4) -> MLSTMCache:
+    du = proj_factor * d_model
+    hd = du // n_heads
+    return MLSTMCache(
+        C=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, n_heads, hd), jnp.float32),
+        m=jnp.zeros((batch, n_heads), jnp.float32),
+        conv=jnp.zeros((batch, d_conv - 1, du), jnp.float32),
+    )
+
+
+def mlstm_cache_axes() -> MLSTMCache:
+    return MLSTMCache(
+        C=("batch", "heads", None, None),
+        n=("batch", "heads", None),
+        m=("batch", "heads"),
+        conv=("batch", None, "mlp"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int, ff_factor: float = 4 / 3):
+    hd = d_model // n_heads
+    ff = int(ff_factor * d_model)
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["wx"], a["wx"] = dense_init(ks[0], d_model, 4 * d_model, "embed", "mlp")
+    p["r"] = jax.random.normal(ks[1], (n_heads, hd, 4 * hd), jnp.float32) / jnp.sqrt(hd)
+    a["r"] = ("heads", None, None)
+    p["b"] = jnp.zeros((4 * d_model,), jnp.float32)
+    a["b"] = ("mlp",)
+    p["gn"], a["gn"] = norm_init(d_model)
+    p["up_g"], a["up_g"] = dense_init(ks[2], d_model, ff, "embed", "mlp")
+    p["up_v"], a["up_v"] = dense_init(ks[3], d_model, ff, "embed", "mlp")
+    p["down"], a["down"] = dense_init(ks[4], ff, d_model, "mlp", "embed")
+    return p, a
+
+
+def _slstm_scan(wx_t, p, n_heads: int, state: SLSTMCache, seq_chunk: int = 0):
+    """wx_t: (B, S, 4*d) precomputed input contributions."""
+    B, S, d4 = wx_t.shape
+    d = d4 // 4
+    hd = d // n_heads
+    r = p["r"]
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        hh = h.reshape(B, n_heads, hd)
+        rec = jnp.einsum("bhk,hkf->bhf", hh, r).reshape(B, 4 * d)
+        zifo = xt + rec + p["b"]
+        z_r, i_r, f_r, o_r = jnp.split(zifo, 4, -1)
+        log_f = -jax.nn.softplus(-f_r)
+        m_new = jnp.maximum(log_f + m, i_r)
+        ig = jnp.exp(i_r - m_new)
+        fg = jnp.exp(log_f + m - m_new)
+        c = fg * c + ig * jnp.tanh(z_r)
+        n = fg * n + ig
+        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    xs = jnp.moveaxis(wx_t.astype(jnp.float32), 1, 0)
+    if seq_chunk and S % seq_chunk == 0 and S > seq_chunk:
+
+        @jax.checkpoint
+        def chunk_step(carry, xs_chunk):
+            return jax.lax.scan(step, carry, xs_chunk)
+
+        xs_c = xs.reshape((S // seq_chunk, seq_chunk) + xs.shape[1:])
+        (c, n, h, m), hs = jax.lax.scan(chunk_step, tuple(state), xs_c)
+        hs = hs.reshape((S,) + hs.shape[2:])
+    else:
+        (c, n, h, m), hs = jax.lax.scan(step, tuple(state), xs)
+    return jnp.moveaxis(hs, 0, 1), SLSTMCache(c, n, h, m)
+
+
+def slstm_apply(p, x: jnp.ndarray, n_heads: int, *,
+                cache: SLSTMCache | None = None, want_state: bool = False,
+                seq_chunk: int = 0):
+    B, S, d = x.shape
+    wx = dense_apply(p["wx"], x)
+    state = cache if cache is not None else SLSTMCache(
+        c=jnp.zeros((B, d), jnp.float32), n=jnp.zeros((B, d), jnp.float32),
+        h=jnp.zeros((B, d), jnp.float32), m=jnp.zeros((B, d), jnp.float32),
+    )
+    h, new_state = _slstm_scan(wx, p, n_heads, state, seq_chunk=seq_chunk)
+    h = norm_apply(p["gn"], h.astype(x.dtype))
+    h = jax.nn.silu(dense_apply(p["up_g"], h)) * dense_apply(p["up_v"], h)
+    out = dense_apply(p["down"], h)
+    return out, (new_state if (cache is not None or want_state) else None)
+
+
+def slstm_cache_init(batch: int, d_model: int) -> SLSTMCache:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMCache(z, z, z, z)
+
+
+def slstm_cache_axes() -> SLSTMCache:
+    ax = ("batch", "mlp")
+    return SLSTMCache(ax, ax, ax, ax)

@@ -1,0 +1,193 @@
+"""Logical-axis -> mesh-axis sharding resolver with divisibility fallbacks.
+
+Every parameter/cache leaf carries a tuple of logical axis names (see
+models/layers.py). The resolver maps them onto the physical mesh:
+
+    batch     -> ('pod', 'data')          (data parallel, pods included)
+    embed     -> 'data'   (ZeRO/FSDP)     fallback: 'model' (row-parallel)
+    heads/kv/mlp/vocab -> 'model'         (tensor parallel)
+    experts   -> 'model'  (expert parallel; falls back to sharding the
+                           expert FFN width when E doesn't divide, e.g.
+                           qwen2's 60 experts on a 16-way axis)
+    kv_cache  -> 'model'  (decode KV-heads) fallback: the cache *sequence*
+    kvseq     -> 'model'  (only if kv_cache could not shard — e.g. 8 KV heads
+                           on a 16-way axis -> shard the 32k sequence instead)
+    layers    -> never sharded (scan dimension)
+
+An axis candidate is taken only if its size divides the dimension and no
+other dimension of the same tensor already claimed it. This is what lets one
+rule set serve all ten architectures (36 heads, 60 experts, 256206 vocab...)
+without per-arch special cases.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# candidate lists per logical name; each candidate is a tuple of mesh axes.
+# '+' candidates are second-pass (only if 'model' is still unused).
+RULES: dict[str, list[tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",)],
+    "embed": [("data",)],
+    "heads": [("model",)],
+    "kv": [("model",)],
+    "mlp": [("model",)],
+    "experts": [("model",)],
+    "vocab": [("model",)],
+    "kv_cache": [("model",)],
+    "kvseq": [("model",)],
+    "act_embed": [],          # activations stay batch-sharded (Megatron style)
+    "layers": [],
+    None: [],
+}
+SECOND_PASS: dict[str, list[tuple[str, ...]]] = {
+    "embed": [("model",)],    # row-parallel fallback when TP axis went unused
+}
+# resolution priority: dims earlier in this list claim mesh axes first
+# (experts outrank mlp: expert-parallel first, expert-width as the fallback)
+PRIORITY = ["batch", "kv_cache", "heads", "kv", "experts", "mlp", "vocab",
+            "kvseq", "embed"]
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class Resolver:
+    """profile:
+    - 'auto'    : FSDP + TP rules above (default)
+    - 'dp_only' : pure data parallelism — params replicated, batch sharded
+                  over every mesh axis. Right for small models (xlstm-125m)
+                  where FSDP/TP collectives dwarf compute (§Perf).
+    """
+
+    def __init__(self, mesh: Mesh, profile: str = "auto"):
+        self.mesh = mesh
+        self.profile = profile
+
+    def _rules(self, name):
+        if self.profile == "dp_only":
+            if name == "batch":
+                axes = tuple(a for a in ("pod", "data", "model")
+                             if a in self.mesh.shape)
+                return [axes]
+            return []
+        return RULES.get(name, [])
+
+    def spec_for(self, shape, logical) -> PartitionSpec:
+        """shape: tuple of ints; logical: tuple of names (len == ndim)."""
+        assert len(shape) == len(logical), (shape, logical)
+        assign: list[Any] = [None] * len(shape)
+        used: set[str] = set()
+
+        order = sorted(
+            range(len(shape)),
+            key=lambda i: PRIORITY.index(logical[i])
+            if logical[i] in PRIORITY else len(PRIORITY),
+        )
+
+        def try_assign(i, candidates):
+            for cand in candidates:
+                if any(a not in self.mesh.shape for a in cand):
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                if shape[i] % _axes_size(self.mesh, cand) != 0:
+                    continue
+                assign[i] = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                return True
+            return False
+
+        for i in order:
+            try_assign(i, self._rules(logical[i]))
+        if self.profile != "auto":
+            return PartitionSpec(*assign)
+        if "model" not in used:
+            # second pass: hand the unused TP axis to a dim that accepts it —
+            # either an unassigned dim, or by *extending* an FSDP-sharded dim
+            # to ('data', 'model') (row-parallel fallback).
+            for i in order:
+                if logical[i] not in SECOND_PASS:
+                    continue
+                if assign[i] is None:
+                    if try_assign(i, SECOND_PASS[logical[i]]):
+                        break
+                else:
+                    cur = assign[i] if isinstance(assign[i], tuple) else (assign[i],)
+                    ext = cur + ("model",)
+                    if shape[i] % _axes_size(self.mesh, ext) == 0:
+                        assign[i] = ext
+                        used.add("model")
+                        break
+        return PartitionSpec(*assign)
+
+    def sharding_for(self, shape, logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, logical))
+
+    def constrain(self, x, logical):
+        spec = self.spec_for(x.shape, logical)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def tree_shardings(self, tree, axes_tree):
+        """Parallel-walk (tree, axes) -> tree of NamedShardings."""
+        return map_with_axes(
+            lambda leaf, ax: self.sharding_for(leaf.shape, ax), tree, axes_tree)
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def map_with_axes(f, tree, axes):
+    """tree.map over parallel (values, logical-axes) trees; axes leaves are
+    tuples of names (which are themselves pytrees, hence the manual walk)."""
+    if is_axes_leaf(axes):
+        return f(tree, axes)
+    if isinstance(tree, dict):
+        return {k: map_with_axes(f, tree[k], axes[k]) for k in tree}
+    if hasattr(tree, "_fields"):  # NamedTuple
+        return type(tree)(*[
+            map_with_axes(f, a, b) for a, b in zip(tree, axes)])
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(map_with_axes(f, a, b) for a, b in zip(tree, axes))
+    return f(tree, axes)
+
+
+# ---------------------------------------------------------------------------
+# Active-resolver context (used by model code for activation constraints)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Resolver | None = None
+
+
+@contextlib.contextmanager
+def use_resolver(r: Resolver | None):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = r
+    try:
+        yield r
+    finally:
+        _ACTIVE = prev
+
+
+def active() -> Resolver | None:
+    return _ACTIVE
+
+
+def constrain(x, logical):
+    """Sharding constraint if a resolver is active; identity otherwise."""
+    if _ACTIVE is None:
+        return x
+    if x.ndim != len(logical):
+        return x
+    return _ACTIVE.constrain(x, logical)

@@ -1,0 +1,48 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 symmetric quantization per tensor before the (implicit, SPMD-inserted)
+all-reduce, with an error-feedback residual kept in host-invisible state-free
+form: the quantization error is *re-added to the gradient of the next call*
+via a functional residual carried in the optimizer flow. Two entry points:
+
+- ``compress_decompress(grads)``: stateless q->dq (models the wire format;
+  the SPMD all-reduce then moves 4x fewer effective mantissa bits — on real
+  hardware this is paired with an int8 all-reduce custom call).
+- ``ef_step(grads, residual)``: error-feedback variant returning the new
+  residual (used by the fault-tolerant trainer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _q(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads):
+    def f(g):
+        q, s = _q(g.astype(jnp.float32))
+        return (q.astype(jnp.float32) * s).astype(g.dtype)
+
+    return jax.tree.map(f, grads)
+
+
+def ef_step(grads, residual):
+    """(grads, residual) -> (decompressed grads, new residual)."""
+    def f(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _q(x)
+        dq = q.astype(jnp.float32) * s
+        return dq.astype(g.dtype), x - dq
+
+    flat = jax.tree.map(f, grads, residual)
+    return (jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple)),
+            jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple)))
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

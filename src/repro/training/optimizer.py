@@ -1,0 +1,75 @@
+"""Pure-JAX optimizers (no optax available in this environment).
+
+AdamW with decoupled weight decay + standard LM schedules. Works on any
+pytree; used both by the paper-wing CNN trainer and the LM train_step.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: float | jnp.ndarray = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 1.0,
+):
+    """One AdamW step -> (new_params, new_state)."""
+    step = state.step + 1
+
+    if grad_clip is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        u = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            u = u + weight_decay * p
+        return (p - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    """Linear warmup -> cosine decay (the standard LM schedule)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,145 @@
+"""Distributed train step: grad-accumulation microbatching, mixed precision,
+optional int8 gradient compression, AdamW — all pure JAX, pjit-ready.
+
+The microbatch loop is a ``lax.scan`` whose carry is the gradient
+accumulator: XLA overlaps each microbatch's reduce-scatter with the next
+microbatch's compute (the donated carry keeps the collective off the critical
+path) — the overlap trick the §Perf log measures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as model_lib
+from .grad_compress import compress_decompress
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray
+
+
+def init_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_axes(params_axes):
+    """Logical axes for the full TrainState (opt moments mirror params)."""
+    return TrainState(
+        params=params_axes,
+        opt=AdamWState(step=(), mu=params_axes, nu=params_axes),
+        step=(),
+    )
+
+
+def make_train_step(
+    cfg,
+    *,
+    base_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.1,
+    grad_compression: str | None = None,   # None | 'int8'
+    dp_shard_map_mesh=None,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    dp_shard_map_mesh: manual data parallelism via shard_map — the loss/grad
+    runs per-device on the local batch shard with params replicated, and
+    gradients are combined by ONE pmean after backward. This defeats an XLA
+    SPMD pathology on recurrent models where the partitioner re-all-reduces
+    parameter gradients inside every scan step (observed: 24,576 x 2.4 MB
+    ARs in the xlstm seq-scan; see EXPERIMENTS.md §Perf). Requires replicated
+    params (resolver profile 'dp_only')."""
+
+    def loss(params, mb):
+        return model_lib.loss_fn(params, cfg, mb)
+
+    def grads_of(params, batch):
+        """(loss, grads) — SPMD auto-partitioned or manual-DP shard_map."""
+        if dp_shard_map_mesh is None:
+            (l, _m), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            return l, g
+
+        mesh = dp_shard_map_mesh
+        from jax.sharding import PartitionSpec as P
+
+        # shard the batch over the largest mesh-axis subset that divides it
+        # (e.g. global_batch 256 on a 2x16x16 pod pair -> ('data','model'),
+        # replicated across 'pod'; the pmean below still spans all axes, so
+        # gradients stay correct — pods just do redundant compute when the
+        # batch is too small for them, which the launcher logs).
+        bdim = jax.tree.leaves(batch)[0].shape[0]
+        axes = ()
+        prod = 1
+        for a in ("data", "model", "pod"):
+            if a in mesh.shape and bdim % (prod * mesh.shape[a]) == 0:
+                axes += (a,)
+                prod *= mesh.shape[a]
+
+        def local(params, mb):
+            (l, _m), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+            g = jax.lax.pmean(g, axes)      # the one grad sync per step
+            l = jax.lax.pmean(l, axes)
+            return l, g
+
+        batch_specs = jax.tree.map(lambda _: P(axes), batch)
+        param_specs = jax.tree.map(lambda _: P(), params)
+        f = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(param_specs, batch_specs),
+            out_specs=(P(), param_specs),
+            check_vma=False,
+        )
+        return f(params, batch)
+
+    def train_step(state: TrainState, batch):
+        m = cfg.microbatches
+        lr = cosine_schedule(state.step, base_lr=base_lr, warmup=warmup,
+                             total=total_steps)
+
+        if m > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                l, g = grads_of(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, losses = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss_val = losses.mean()
+        else:
+            loss_val, grads = grads_of(state.params, batch)
+
+        if grad_compression == "int8":
+            grads = compress_decompress(grads)
+
+        params, opt = adamw_update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=weight_decay)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        metrics = {
+            "loss": loss_val,
+            "lr": lr,
+            "grad_norm": _norm(grads),
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def _norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree.leaves(tree)))

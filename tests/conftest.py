@@ -1,0 +1,10 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run alone forces 512
+# host devices, inside launch/dryrun.py only — never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,64 @@
+"""AEQ interlacing invariants (paper Figs. 3-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import aeq, encoding
+
+
+@given(seed=st.integers(0, 2**16), density=st.floats(0.01, 0.6))
+def test_compact_decode_roundtrip(seed, density):
+    fmt = encoding.make_format(28, 3)
+    rng = np.random.default_rng(seed)
+    sm = (rng.random((28, 28)) < density).astype(np.float32)
+    depth = 128
+    words, counts, dropped = aeq.compact_spikes(fmt, jnp.asarray(sm), depth)
+    y, x, valid = aeq.decode_positions(fmt, words)
+    got = np.zeros((30, 30))
+    got[np.asarray(y)[np.asarray(valid)], np.asarray(x)[np.asarray(valid)]] = 1
+    np.testing.assert_array_equal(got[:28, :28], sm)
+    assert int(counts.sum()) == int(sm.sum())
+    assert int(dropped) == 0
+
+
+def test_overflow_counted_not_silent():
+    fmt = encoding.make_format(28, 3)
+    sm = jnp.ones((28, 28))  # everything spikes
+    depth = 10
+    words, counts, dropped = aeq.compact_spikes(fmt, sm, depth)
+    assert int(counts.max()) <= depth
+    # 28x28 = 784 events; capacity 9 phases x 10
+    assert int(dropped) == 784 - int(counts.sum())
+    assert int(dropped) > 0
+
+
+@given(seed=st.integers(0, 2**16))
+def test_phase_conflict_freedom(seed):
+    """The paper's interlacing guarantee: same-phase events have pairwise
+    distinct positions, so one event per phase is conflict-free."""
+    fmt = encoding.make_format(28, 3)
+    rng = np.random.default_rng(seed)
+    sm = (rng.random((28, 28)) < 0.3).astype(np.float32)
+    words, counts, _ = aeq.compact_spikes(fmt, jnp.asarray(sm), 128)
+    y, x, valid = aeq.decode_positions(fmt, words)
+    y, x, valid = map(np.asarray, (y, x, valid))
+    for ph in range(9):
+        pos = list(zip(y[ph][valid[ph]], x[ph][valid[ph]]))
+        assert len(pos) == len(set(pos))
+        # all events of phase ph agree on (y mod K, x mod K)
+        mods = {(yy % 3, xx % 3) for yy, xx in pos}
+        assert len(mods) <= 1
+
+
+def test_aeq_from_raster_segments():
+    fmt = encoding.make_format(12, 3)
+    rng = np.random.default_rng(0)
+    raster = (rng.random((4, 2, 12, 12)) < 0.2).astype(np.float32)
+    q = aeq.aeq_from_raster(fmt, jnp.asarray(raster), depth=32)
+    assert q.words.shape == (4, 2, 9, 32)
+    # per-segment counts match raster sums per (t, c)
+    for t in range(4):
+        for c in range(2):
+            assert int(q.counts[t, c].sum()) == int(raster[t, c].sum())
+    assert int(aeq.aeq_total_events(q)) == int(raster.sum())

@@ -1,0 +1,80 @@
+"""The central identity: event-driven processing == dense convolution, and
+the queue-based accelerator path == the dense-dynamics reference path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aeq, encoding, snn_layers, snn_model
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    hw=st.sampled_from([9, 12, 28]),
+    c_in=st.sampled_from([1, 3]),
+    c_out=st.sampled_from([4, 8]),
+    density=st.floats(0.02, 0.5),
+)
+@settings(max_examples=15)
+def test_event_conv_equals_dense_conv(seed, hw, c_in, c_out, density):
+    fmt = encoding.make_format(hw, 3)
+    rng = np.random.default_rng(seed)
+    raster = (rng.random((1, c_in, hw, hw)) < density).astype(np.float32)
+    q = aeq.aeq_from_raster(fmt, jnp.asarray(raster), depth=hw * hw)
+    w = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+
+    vm = jnp.zeros((hw, hw, c_out))
+    vm, n_ops = snn_layers.event_conv2d(vm, w, q, fmt, 0)
+    oracle = snn_layers.dense_conv_oracle(jnp.asarray(raster[0]), w)
+    np.testing.assert_allclose(np.asarray(vm), np.asarray(oracle),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_event_dense_counts_only_spikes():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(6, 4)), jnp.float32)
+    spikes = jnp.asarray([1.0, 0.0, 1.0, 0.0, 0.0, 1.0])
+    v, n_ops = snn_layers.event_dense(jnp.zeros(4), w, spikes)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(spikes @ w), atol=1e-6)
+    assert int(n_ops) == 3 * 4
+
+
+def test_queue_path_equals_dense_path():
+    """snn_infer (AEQs, the hardware model) and snn_dense_infer (reference
+    dynamics) produce identical logits and event statistics."""
+    spec = "8C3-P3-6C3-10"
+    params = snn_model.init_params(jax.random.PRNGKey(1), spec, 12, 1)
+    th = [jnp.asarray(0.5)] * len(snn_model.parse_spec(spec))
+    rng = np.random.default_rng(3)
+    img = jnp.asarray(rng.random((12, 12, 1)), jnp.float32)
+
+    for input_mode in ("analog", "binary"):
+        cfg = snn_model.SNNConfig(
+            spec=spec, input_hw=12, input_c=1, T=3, depth=64,
+            input_mode=input_mode, mode="mttfs_cont")
+        lq, sq = snn_model.snn_infer(params, th, cfg, img)
+        ld, sd = snn_model.snn_dense_infer(params, th, cfg, img)
+        np.testing.assert_allclose(np.asarray(lq), np.asarray(ld),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(sq.events_in),
+                                      np.asarray(sd.events_in))
+        np.testing.assert_array_equal(np.asarray(sq.spikes_out),
+                                      np.asarray(sd.spikes_out))
+        assert int(sq.overflow) == int(sd.overflow) == 0
+
+
+def test_neuron_modes_differ_as_specified():
+    """spike-once emits <= 1 spike per neuron; continuous emits >= as many."""
+    spec = "8C3-10"
+    params = snn_model.init_params(jax.random.PRNGKey(2), spec, 9, 1)
+    th = [jnp.asarray(0.3)] * 2
+    img = jnp.asarray(np.random.default_rng(0).random((9, 9, 1)), jnp.float32)
+
+    def spikes(mode):
+        cfg = snn_model.SNNConfig(spec=spec, input_hw=9, input_c=1, T=4,
+                                  depth=64, mode=mode)
+        _, stats = snn_model.snn_dense_infer(params, th, cfg, img)
+        return int(stats.spikes_out.sum())
+
+    once, cont = spikes("mttfs"), spikes("mttfs_cont")
+    assert once <= 9 * 9 * 8           # spike-once bound: one per neuron
+    assert cont >= once

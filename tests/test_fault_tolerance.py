@@ -1,0 +1,93 @@
+"""Fault tolerance: heartbeats, straggler EWMA, resilient loop, elasticity."""
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                           StragglerDetector, run_resilient)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_dead_host():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(n_hosts=4, timeout_s=10, clock=clock)
+    clock.t = 5
+    for h in (0, 1, 3):
+        mon.beat(h)
+    clock.t = 14
+    assert mon.dead_hosts() == [2]
+    assert not mon.all_alive()
+
+
+def test_straggler_detector_flags_after_patience():
+    det = StragglerDetector(n_hosts=4, factor=1.5, patience=3)
+    for step in range(5):
+        times = np.array([1.0, 1.0, 1.0, 3.0])
+        flagged = det.observe(times)
+    assert flagged == [3]
+    shares = det.rebalance_shares()
+    assert shares[3] < shares[0]
+    assert abs(shares.sum() - 1.0) < 1e-9
+
+
+def test_straggler_recovers():
+    det = StragglerDetector(n_hosts=2, factor=1.5, patience=2)
+    det.observe(np.array([1.0, 4.0]))
+    det.observe(np.array([1.0, 1.0]))  # recovered -> strikes reset
+    assert det.observe(np.array([1.0, 1.0])) == []
+
+
+def test_elastic_plan_shrinks_model_axis(tmp_path):
+    plan = ElasticPlan.make(24, str(tmp_path), model_parallel=16)
+    assert plan.mesh_shape == (3, 8)
+    plan = ElasticPlan.make(256, str(tmp_path), model_parallel=16)
+    assert plan.mesh_shape == (16, 16)
+
+
+def test_run_resilient_survives_injected_failure(tmp_path):
+    import jax
+
+    from repro import configs
+    from repro.data.pipeline import TokenStream
+    from repro.models import model as M
+    from repro.training import train_loop
+
+    cfg = configs.get_smoke("phi4-mini-3.8b")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    state = train_loop.init_state(params)
+    step_fn = jax.jit(train_loop.make_train_step(cfg, base_lr=1e-3,
+                                                 warmup=2, total_steps=20))
+    stream = TokenStream(cfg.vocab, 32, 4)
+
+    state, history = run_resilient(
+        train_step=step_fn, state=state, batches=iter(stream),
+        ckpt_root=str(tmp_path), ckpt_every=5,
+        fail_at={7: RuntimeError("injected")}, max_steps=12)
+    # failed at step 7, restored from step-5 checkpoint, reran 5..11
+    assert int(state.step) == 12
+    assert history[-1] < history[0]
+
+
+def test_run_resilient_failure_before_checkpoint_raises(tmp_path):
+    import jax
+
+    from repro import configs
+    from repro.data.pipeline import TokenStream
+    from repro.models import model as M
+    from repro.training import train_loop
+
+    cfg = configs.get_smoke("xlstm-125m")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    state = train_loop.init_state(params)
+    step_fn = jax.jit(train_loop.make_train_step(cfg))
+    stream = TokenStream(cfg.vocab, 16, 2)
+    with pytest.raises(RuntimeError):
+        run_resilient(train_step=step_fn, state=state, batches=iter(stream),
+                      ckpt_root=str(tmp_path), ckpt_every=50,
+                      fail_at={2: RuntimeError("early")}, max_steps=5)

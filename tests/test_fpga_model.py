@@ -1,0 +1,48 @@
+"""Paper Eq. 3-5 BRAM model vs the paper's own Table 5 rows — exact."""
+import pytest
+
+from repro.core import fpga_model as fm
+
+
+def test_eq3_words_per_bram():
+    assert fm.bram_words(36) == 1024
+    assert fm.bram_words(16) == 2048
+    assert fm.bram_words(10) == 2048
+    assert fm.bram_words(8) == 4096
+    assert fm.bram_words(4) == 8192
+    assert fm.bram_words(2) == 16384
+    assert fm.bram_words(1) == 32768
+
+
+@pytest.mark.parametrize("P,D,w,expected_aeq,D_m,w_m,expected_mem", [
+    # paper Table 5 rows (K2 = 9 interlaced queues)
+    (1, 6100, 10, 27, 256, 16, 9),    # SNN1_BRAM (w=16)
+    (4, 2048, 10, 36, 256, 8, 36),    # SNN4_BRAM
+    (8, 750, 10, 36, 256, 8, 72),     # SNN8_BRAM
+])
+def test_table5_rows_exact(P, D, w, expected_aeq, D_m, w_m, expected_mem):
+    assert fm.n_bram(P, 9, D, w) == expected_aeq
+    assert 2 * fm.n_bram(P, 9, D_m, w_m) == expected_mem
+
+
+def test_compressed_encoding_saves_brams():
+    """Sec. 5.2: 10-bit words hold 2048/BRAM; 8-bit compressed hold 4096 —
+    the compression halves AEQ BRAM count at D=4096."""
+    uncompressed = fm.n_bram(1, 9, 4096, 10)
+    compressed = fm.n_bram(1, 9, 4096, 8)
+    assert compressed == uncompressed / 2
+
+
+def test_shallow_memory_occupancy():
+    # paper: D=256 8-bit membrane memories use only 6.25% of a BRAM
+    assert fm.bram_occupancy(256, 8) == 256 / 4096 / 0.5  # half-BRAM minimum
+    # i.e. 12.5% of the half BRAM allocated == paper's "6.25% of a full BRAM"
+    assert 256 / 4096 == 0.0625
+
+
+def test_memory_plan_totals():
+    plan = fm.snn_memory_plan(P=8, D_aeq=750, w_aeq=10)
+    assert plan.bram_aeq == 36
+    assert plan.bram_membrane == 72
+    assert plan.bram_weights == 20.0
+    assert plan.bram_total == 128

@@ -1,0 +1,79 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aeq, encoding
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("hw,c_in,c_out,depth", [
+    (9, 1, 8, 16), (12, 3, 16, 32), (28, 4, 32, 64), (28, 2, 128, 24),
+])
+def test_event_accum_sweep(hw, c_in, c_out, depth):
+    fmt = encoding.make_format(hw, 3)
+    rng = np.random.default_rng(hw * depth)
+    raster = (rng.random((1, c_in, hw, hw)) < 0.15).astype(np.float32)
+    q = aeq.aeq_from_raster(fmt, jnp.asarray(raster), depth)
+    w = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+    vm = jnp.asarray(rng.normal(size=(hw, hw, c_out)), jnp.float32)
+
+    kw = dict(K=3, n_win=fmt.n_win, bits=fmt.bits_coord)
+    out_k = ops.event_accum(q.words[0], q.counts[0], w, vm, **kw)
+    out_r = ref.event_accum_ref(q.words[0], q.counts[0], w, vm, **kw)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("rows,n_win,depth", [(4, 4, 8), (9, 10, 40), (18, 10, 16)])
+def test_spike_compact_sweep(rows, n_win, depth):
+    fmt = encoding.make_format(n_win * 3, 3)
+    rng = np.random.default_rng(rows)
+    occ = (rng.random((rows, n_win * n_win)) < 0.3).astype(np.int32)
+    kw = dict(n_win=n_win, bits=fmt.bits_coord, depth=depth,
+              invalid=fmt.invalid_word)
+    wk, ck = ops.spike_compact(jnp.asarray(occ), **kw)
+    wr, cr = ref.spike_compact_ref(jnp.asarray(occ), **kw)
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 32, 8), (100, 200, 60), (128, 128, 128),
+                                   (130, 257, 64)])
+def test_quant_matmul_sweep(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    a = rng.integers(-127, 127, (m, k)).astype(np.int8)
+    b = rng.integers(-127, 127, (k, n)).astype(np.int8)
+    got = ops.quant_matmul(jnp.asarray(a), jnp.asarray(b),
+                           jnp.float32(0.013), jnp.float32(0.021),
+                           block_m=64, block_n=64, block_k=64)
+    want = ref.quant_matmul_ref(jnp.asarray(a), jnp.asarray(b),
+                                jnp.float32(0.013), jnp.float32(0.021))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("t,d,s", [(16, 8, 12), (64, 32, 50), (10, 128, 40)])
+def test_moe_gather_sweep(t, d, s):
+    rng = np.random.default_rng(t + d)
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, t, s), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ops.moe_gather(x, idx)),
+        np.asarray(ref.moe_gather_ref(x, idx)))
+
+
+def test_kernels_dtype_bf16_event_accum():
+    fmt = encoding.make_format(12, 3)
+    rng = np.random.default_rng(0)
+    raster = (rng.random((1, 2, 12, 12)) < 0.2).astype(np.float32)
+    q = aeq.aeq_from_raster(fmt, jnp.asarray(raster), 32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 2, 8)), jnp.bfloat16)
+    vm = jnp.zeros((12, 12, 8), jnp.bfloat16)
+    kw = dict(K=3, n_win=fmt.n_win, bits=fmt.bits_coord)
+    out_k = ops.event_accum(q.words[0], q.counts[0], w, vm, **kw)
+    out_r = ref.event_accum_ref(q.words[0], q.counts[0],
+                                w.astype(jnp.float32),
+                                vm.astype(jnp.float32), **kw)
+    np.testing.assert_allclose(np.asarray(out_k, dtype=np.float32),
+                               np.asarray(out_r), atol=0.1)

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced same-family configs, one train step
++ one decode step on CPU, asserting shapes and finiteness (the assignment's
+required smoke coverage; full configs run only through the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.training.train_loop import init_state, make_train_step
+
+ARCHS = configs.all_arch_names()
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.enc_dec:
+        batch["src_embeddings"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16)
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                      jnp.int32)
+    elif cfg.frontend != "none":
+        batch["embeddings"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                      jnp.int32)
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    params, axes = M.init_model(jax.random.PRNGKey(0), cfg)
+    state = init_state(params)
+    step = jax.jit(make_train_step(cfg))
+    state, metrics = step(state, _batch(cfg))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "jamba-v0.1-52b", "xlstm-125m",
+                                  "seamless-m4t-medium"])
+def test_arch_smoke_decode(arch):
+    cfg = configs.get_smoke(arch)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    batch = _batch(cfg, B, S)
+    pf = {k: v for k, v in batch.items() if k != "labels"}
+    logits, caches = M.prefill(params, cfg, pf, max_seq=S + 4)
+    assert logits.shape == (B, cfg.vocab)
+    dec = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.enc_dec:
+        dec["enc_out"] = jnp.asarray(
+            np.random.default_rng(0).normal(size=(B, S, cfg.d_model)),
+            jnp.bfloat16)
+    logits2, _ = M.decode_step(params, cfg, caches, dec)
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+def test_decode_matches_forward_dense_arch():
+    """prefill + decode == training forward on the extended sequence."""
+    cfg = configs.get_smoke("gemma-7b")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (B, S)),
+                       jnp.int32)
+    lp, caches = M.prefill(params, cfg, {"tokens": toks}, max_seq=S + 2)
+    lf, _ = M.forward(params, cfg, {"tokens": toks}, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(lp), np.asarray(lf[:, -1, : cfg.vocab], dtype=np.float32),
+        atol=0.15)
+    nxt = jnp.argmax(lp, -1)[:, None].astype(jnp.int32)
+    ld, _ = M.decode_step(params, cfg, caches, {"tokens": nxt})
+    lf2, _ = M.forward(params, cfg,
+                       {"tokens": jnp.concatenate([toks, nxt], 1)},
+                       remat=False)
+    np.testing.assert_allclose(
+        np.asarray(ld), np.asarray(lf2[:, -1, : cfg.vocab], dtype=np.float32),
+        atol=0.15)
+
+
+def test_full_config_dimensions_match_assignment():
+    """The exact dimensions from the assignment table."""
+    expect = {
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 0, 151936),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 0, 163840),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = configs.get(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v), arch
+    # MoE details
+    q = configs.get("qwen2-moe-a2.7b").moe
+    assert (q.n_experts, q.top_k, q.expert_d_ff) == (60, 4, 1408)
+    m = configs.get("moonshot-v1-16b-a3b").moe
+    assert (m.n_experts, m.top_k) == (64, 6)
+    j = configs.get("jamba-v0.1-52b")
+    assert (j.moe.n_experts, j.moe.top_k) == (16, 2)
+    assert j.block_pattern.count("attn") * 8 == len(j.block_pattern)  # 1:7
+    assert configs.get("gemma-7b").head_dim == 256
+
+
+def test_param_scale_sanity():
+    """Full-config analytic param counts are in the advertised ballpark."""
+    assert 18e9 < configs.get("internlm2-20b").param_count() < 22e9
+    assert 6.5e9 < configs.get("starcoder2-7b").param_count() < 8.5e9
+    assert 3.2e9 < configs.get("phi4-mini-3.8b").param_count() < 4.8e9
+    assert 7.5e9 < configs.get("gemma-7b").param_count() < 9.5e9
+    assert 0.10e9 < configs.get("xlstm-125m").param_count() < 0.20e9
+    assert 12e9 < configs.get("qwen2-moe-a2.7b").param_count() < 17e9
+    assert 45e9 < configs.get("jamba-v0.1-52b").param_count() < 60e9
+    assert 30e9 < configs.get("llava-next-34b").param_count() < 38e9
+
+
+def test_vocab_padding():
+    cfg = configs.get("seamless-m4t-medium")
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab

@@ -1,0 +1,82 @@
+"""Sharding resolver: divisibility fallbacks that the 10 archs exercise."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.resolver import Resolver, is_axes_leaf, map_with_axes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 4x2 stand-in for (data, model) — same resolver logic as 16x16
+    devs = np.array(jax.devices() * 8)[:8].reshape(4, 2)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, ("data", "model"))
+
+
+def test_fsdp_plus_tp(mesh):
+    r = Resolver(mesh)
+    # (embed, mlp) weight: embed -> data (fsdp), mlp -> model (tp)
+    assert r.spec_for((64, 128), ("embed", "mlp")) == P("data", "model")
+
+
+def test_experts_divisibility_fallback(mesh):
+    r = Resolver(mesh)
+    # 60 experts don't divide the 2-way model axis -> expert width shards
+    spec = r.spec_for((61, 64, 128), ("experts", "embed", "mlp"))
+    assert spec == P(None, "data", "model")
+    # 64 experts divide -> expert-parallel, width unsharded
+    spec = r.spec_for((64, 64, 128), ("experts", "embed", "mlp"))
+    assert spec == P("model", "data", None)
+
+
+def test_kv_cache_seq_fallback(mesh):
+    r = Resolver(mesh)
+    # kv=16 divides the model axis: shard heads, not seq
+    assert r.spec_for((8, 1024, 16, 128),
+                      ("batch", "kvseq", "kv_cache", None)) == \
+        P("data", None, "model", None)
+    # kv=1 (MQA) cannot shard -> the sequence shards instead
+    assert r.spec_for((8, 1024, 1, 128),
+                      ("batch", "kvseq", "kv_cache", None)) == \
+        P("data", "model", None, None)
+
+
+def test_row_parallel_second_pass(mesh):
+    r = Resolver(mesh)
+    # output dim 63 never divides -> second pass puts model on embed (row-par)
+    assert r.spec_for((64, 63), ("embed", "heads")) == P(("data", "model")) or \
+        r.spec_for((64, 63), ("embed", "heads"))[0] in (("data", "model"),)
+
+
+def test_batch_axis_multi_pod():
+    devs = np.array(jax.devices() * 8)[:8].reshape(2, 2, 2)
+    from jax.sharding import Mesh
+
+    mesh3 = Mesh(devs, ("pod", "data", "model"))
+    r = Resolver(mesh3)
+    spec = r.spec_for((8, 128), ("batch", None))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_indivisible_stays_replicated(mesh):
+    r = Resolver(mesh)
+    assert r.spec_for((7, 13), ("embed", "mlp")) == P(None, None)
+
+
+def test_map_with_axes_namedtuple():
+    from repro.models.attention import KVCache, cache_axes
+
+    cache = KVCache(k=np.zeros((2, 4, 2, 8)), v=np.zeros((2, 4, 2, 8)),
+                    pos=np.zeros((2,), np.int32))
+    out = map_with_axes(lambda leaf, ax: len(ax), cache, cache_axes())
+    assert out.k == 4 and out.pos == 1
+
+
+def test_is_axes_leaf():
+    assert is_axes_leaf(("embed", "mlp"))
+    assert is_axes_leaf(())
+    assert is_axes_leaf((None, "mlp"))
+    assert not is_axes_leaf(({"a": 1},))
