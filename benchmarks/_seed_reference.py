@@ -1,0 +1,144 @@
+"""Frozen copy of the pre-engine ``snn_dense_infer`` (the perf baseline).
+
+This is the seed repository's dense-path interpreter, verbatim except for
+imports: an unrolled Python loop over T with one convolution traced per time
+step and per-(t, c) phase-split occupancy counting. It exists ONLY so
+``kernel_bench.snn_engine_scan_bench`` can report the engine's speedup
+against the true starting point as the engine evolves — do not use it
+anywhere else (the engine backends in ``repro.core.engine`` are the real
+implementations, and their parity is enforced by tests, not by this file).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.aeq import _phase_split
+from repro.core.encoding import encode_ttfs
+from repro.core.snn_layers import dense_conv_oracle, spike_maxpool
+from repro.core.snn_model import SNNStats, parse_spec
+
+
+def _valid_offsets_map(hw: int, K: int):
+    ones = jnp.ones((1, 1, hw, hw))
+    kern = jnp.ones((K, K, 1, 1))
+    return jax.lax.conv_general_dilated(
+        ones, kern, (1, 1), "SAME", dimension_numbers=("NCHW", "HWIO", "NHWC")
+    )[0, :, :, 0]
+
+
+def _segment_occupancy(fmt, raster_tchw):
+    return jax.vmap(jax.vmap(lambda m: (_phase_split(fmt, m) > 0).sum(-1)))(
+        raster_tchw
+    )
+
+
+def seed_dense_infer(params, thresholds, cfg, image):
+    """The seed's ``snn_dense_infer``, kept as the benchmark baseline."""
+    layers = parse_spec(cfg.spec)
+    T = cfg.T
+    hw, c = cfg.input_hw, cfg.input_c
+
+    events_in, spikes_out, add_ops, queue_words = [], [], [], []
+    overflow = jnp.zeros((), jnp.int32)
+
+    chw = jnp.moveaxis(image, -1, 0)
+    if cfg.input_mode == "binary":
+        raster = encode_ttfs(chw, T, cfg.input_theta)
+        analog = None
+    else:
+        raster = None
+        analog = chw
+
+    li = 0
+    while li < len(layers):
+        ly = layers[li]
+        if ly[0] == "conv":
+            cout, K = ly[1], ly[2]
+            fmt = encoding.make_format(hw, K, compressed=cfg.compressed)
+            w, b = params[li]["w"], params[li]["b"]
+            vth = thresholds[li]
+            v = jnp.full((hw, hw, cout), cfg.v_init_frac * vth, w.dtype)
+            latch = jnp.zeros((hw, hw, cout), jnp.bool_)
+            vmap_off = _valid_offsets_map(hw, K)
+
+            pool = None
+            if li + 1 < len(layers) and layers[li + 1][0] == "pool":
+                pool = layers[li + 1][1]
+                p_hw = hw // pool
+                p_latch = jnp.zeros((cout, p_hw, p_hw), jnp.bool_)
+
+            ops = jnp.zeros((), jnp.float32)
+            ev = jnp.zeros((), jnp.int32)
+            out_frames = []
+            if raster is not None:
+                occ = _segment_occupancy(fmt, raster)
+                queue_words.append(occ.sum().astype(jnp.int32))
+                overflow = overflow + jnp.maximum(occ - cfg.depth, 0).sum()
+                ev = raster.sum().astype(jnp.int32)
+                ops = (raster * vmap_off[None, None]).sum() * cout
+            else:
+                queue_words.append(jnp.zeros((), jnp.int32))
+
+            for t in range(T):
+                if raster is not None:
+                    v = v + dense_conv_oracle(raster[t], w)
+                else:
+                    v = v + dense_conv_oracle(analog, w)
+                    ops = ops + jnp.float32(analog.size * cout * K * K)
+                v = v + b
+                crossed = v > vth
+                if cfg.mode == "mttfs":
+                    sp = crossed & ~latch
+                elif cfg.mode == "mttfs_cont":
+                    sp = crossed
+                elif cfg.mode == "if_reset":
+                    sp = crossed
+                    v = jnp.where(crossed, jnp.zeros_like(v), v)
+                else:
+                    raise ValueError(cfg.mode)
+                latch = latch | crossed
+                sp_chw = jnp.moveaxis(sp.astype(w.dtype), -1, 0)
+                if pool is not None:
+                    sp_chw, p_latch = spike_maxpool(
+                        sp_chw, pool, p_latch,
+                        latch_once=(cfg.mode == "mttfs"))
+                out_frames.append(sp_chw)
+
+            raster = jnp.stack(out_frames)
+            analog = None
+            events_in.append(ev)
+            spikes_out.append(raster.sum().astype(jnp.int32))
+            add_ops.append(ops.astype(jnp.int32))
+            c = cout
+            if pool is not None:
+                hw = hw // pool
+                li += 1
+        elif ly[0] == "pool":
+            raise ValueError("unfused pool (pool must follow a conv)")
+        else:
+            w, b = params[li]["w"], params[li]["b"]
+            flat = jnp.moveaxis(raster, 1, -1).reshape(T, -1)
+            v = (flat @ w).sum(0) + b * T
+            ev = (flat > 0).sum().astype(jnp.int32)
+            events_in.append(ev)
+            spikes_out.append(jnp.zeros((), jnp.int32))
+            add_ops.append(ev * w.shape[1])
+            queue_words.append(jnp.zeros((), jnp.int32))
+            logits = v
+        li += 1
+
+    stats = SNNStats(
+        events_in=jnp.stack(events_in),
+        spikes_out=jnp.stack(spikes_out),
+        add_ops=jnp.stack(add_ops),
+        overflow=overflow,
+        queue_words=jnp.stack(queue_words),
+    )
+    return logits, stats
+
+
+def seed_dense_infer_batch(params, thresholds, cfg, images):
+    return jax.vmap(lambda im: seed_dense_infer(params, thresholds, cfg, im))(
+        images)

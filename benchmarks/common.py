@@ -62,5 +62,11 @@ def trained_cnn(dataset: str, *, epochs: int = 6, n_train: int = 2048,
     return spec, params, imgs
 
 
+# every emit() lands here too, so run.py --json can write a perf snapshot
+RESULTS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    RESULTS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -82,5 +82,62 @@ def moe_gather_bench():
          f"struct_bytes_saved={512 * 12}")
 
 
+def snn_engine_scan_bench():
+    """Engine dense backend (one T-batched conv per layer + ``lax.scan``
+    time loop) vs the seed implementation's unrolled per-step Python loop
+    (the ``dense_unrolled`` reference backend), on the MNIST-class spec.
+
+    Both numbers go through the same engine, so the delta isolates the time
+    loop: trace+compile cost (the unrolled loop traces T copies of every
+    layer; the scan traces one body) and steady-state batch latency. Timing
+    uses min-of-N, the standard noise-robust estimator for shared boxes.
+    """
+    import time
+
+    from repro.core import engine, snn_model
+    from repro.core.snn_model import SNNConfig
+
+    spec = "32C3-P2-32C3-P2-10"
+    params = snn_model.init_params(jax.random.PRNGKey(0), spec, 28, 1)
+    th = [jnp.asarray(1.0)] * len(snn_model.parse_spec(spec))
+    rng = np.random.default_rng(4)
+    imgs = jnp.asarray(rng.random((16, 28, 28, 1)), jnp.float32)
+
+    from ._seed_reference import seed_dense_infer_batch
+
+    for T in (4, 16):
+        cfg = SNNConfig(spec=spec, input_hw=28, input_c=1, T=T, depth=256,
+                        mode="mttfs_cont")
+        seed_fn = jax.jit(
+            lambda ims: seed_dense_infer_batch(params, th, cfg, ims))
+        fns = {
+            "dense": lambda: engine.infer_batch(params, th, cfg, imgs,
+                                                backend="dense"),
+            "dense_unrolled": lambda: engine.infer_batch(
+                params, th, cfg, imgs, backend="dense_unrolled"),
+            "seed": lambda: seed_fn(imgs),
+        }
+        first, mins = {}, {}
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())      # trace + compile + first run
+            first[name] = (time.perf_counter() - t0) * 1e3
+            mins[name] = float("inf")
+        for _ in range(12):                  # interleaved: same load for all
+            for name, fn in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                mins[name] = min(mins[name], time.perf_counter() - t0)
+        for name in fns:
+            emit(f"kernel/snn_engine_{name}_T{T}", mins[name] * 1e6,
+                 f"spec={spec};batch=16;first_call_ms={first[name]:.0f}")
+
+        emit(f"kernel/snn_engine_scan_speedup_T{T}", 0.0,
+             f"steady_vs_seed_x={mins['seed'] / mins['dense']:.2f};"
+             f"first_call_vs_seed_x={first['seed'] / first['dense']:.2f};"
+             f"steady_vs_unrolled_x="
+             f"{mins['dense_unrolled'] / mins['dense']:.2f}")
+
+
 ALL = [event_accum_bench, spike_compact_bench, quant_matmul_bench,
-       moe_gather_bench]
+       moe_gather_bench, snn_engine_scan_bench]

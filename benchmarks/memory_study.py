@@ -64,5 +64,22 @@ def compressed_encoding_traffic():
              f"traffic_saving={1 - f_c.word_bits / f_u.word_bits:.2f}")
 
 
+def plan_static_footprint():
+    """Per-spec VMEM footprint from the compiled LayerPlan (engine + energy
+    model sharing one geometry walk — the Eq. 3-5 analogue on TPU)."""
+    from repro.configs import PAPER_SPECS
+    from repro.core import engine
+    from repro.core.energy import snn_static_costs
+
+    for ds, meta in PAPER_SPECS.items():
+        plan = engine.compile_plan(meta["spec"], meta["hw"], meta["c"])
+        costs = snn_static_costs(plan, T=4, depth=64, word_bytes=1)
+        emit(f"plan/{ds}_static_footprint", 0.0,
+             f"conv_stages={len(plan.convs)};"
+             f"queue_bytes={costs.total_queue_bytes};"
+             f"membrane_bytes={costs.total_state_bytes};"
+             f"vmem_frac={(costs.total_queue_bytes + costs.total_state_bytes) / 16e6:.4f}")
+
+
 ALL = [fig11_residency_sweep, fig10_bram_depth_sweep,
-       compressed_encoding_traffic]
+       compressed_encoding_traffic, plan_static_footprint]

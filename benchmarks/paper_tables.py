@@ -58,8 +58,8 @@ def table3_snn_designs():
 def table4_7_energy_breakdown():
     """Energy split (paper: Signals/BRAM/Logic/Clocks -> compute/HBM/VMEM)."""
     spec, params, imgs = trained_cnn("mnist")
-    from repro.core.snn_model import SNNConfig, snn_dense_infer_batch
-    from repro.core import conversion
+    from repro.core import conversion, engine
+    from repro.core.snn_model import SNNConfig
     from repro.data.synthetic import make_digits
 
     test_imgs, _ = make_digits(32, seed=99)
@@ -68,9 +68,8 @@ def table4_7_energy_breakdown():
                           ("COMPR", True, 1)]:
         cfg = SNNConfig(spec=spec, input_hw=28, input_c=1, T=4, depth=64,
                         mode="mttfs_cont")
-        _, stats = jax.jit(
-            lambda ims: snn_dense_infer_batch(snn_params, th, cfg, ims)
-        )(jnp.asarray(test_imgs))
+        _, stats = engine.infer_batch(snn_params, th, cfg,
+                                      jnp.asarray(test_imgs), backend="dense")
         e = snn_energy(stats, word_bytes=wb, vmem_resident=vmem)
         emit(f"table4_7/{tag}", 0.0,
              f"compute_pJ={float(e.compute_pj.mean()):.4g};"

@@ -43,6 +43,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="mnist only, fewer samples")
+    from repro.core.engine import available_backends
+
+    ap.add_argument("--backend", default="dense",
+                    choices=available_backends(),
+                    help="engine backend for the SNN side (dense = fast "
+                         "lax.scan reference; queue = hardware-faithful AEQ)")
     args = ap.parse_args()
 
     datasets = ["mnist"] if args.quick else ["mnist", "svhn", "cifar10"]
@@ -59,7 +65,8 @@ def main():
         res = run_study(params, spec, ds,
                         jnp.asarray(test_imgs), jnp.asarray(test_labels),
                         jnp.asarray(train_imgs[:256]),
-                        T=4, depth=64, mode="mttfs_cont", balance=not args.quick)
+                        T=4, depth=64, mode="mttfs_cont",
+                        balance=not args.quick, backend=args.backend)
         for k, v in res.summary_rows():
             print(f"  {k:>20s}: {v}")
 

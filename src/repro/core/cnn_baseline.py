@@ -8,6 +8,9 @@ property the paper leans on for the red reference lines in Figs. 7/9/12-15.
 The same forward is used (a) float for training, (b) fake-quant for the
 Brevitas-style quantized training, (c) int8 via kernels/quant_matmul for the
 deployed cost model.
+
+The forward walks the same compiled :class:`repro.core.engine.LayerPlan` the
+SNN backends execute — one spec walk for both sides of the comparison.
 """
 from __future__ import annotations
 
@@ -16,8 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .engine import compile_plan, parse_spec  # noqa: F401  (parse_spec re-export)
 from .quantization import fake_quant, fake_quant_unsigned
-from .snn_model import parse_spec
 
 
 class CNNCosts(NamedTuple):
@@ -36,35 +39,35 @@ def cnn_forward(
     return_acts: bool = False,
 ):
     """Forward pass. ReLU after every conv; final dense has no activation."""
-    layers = parse_spec(spec)
     batched = image.ndim == 4
     x = image if batched else image[None]
+    plan = compile_plan(spec, int(x.shape[1]), int(x.shape[-1]))
 
     acts = []
-    for li, ly in enumerate(layers):
-        if ly[0] == "conv":
-            w, b = params[li]["w"], params[li]["b"]
-            if weight_bits:
-                w = fake_quant(w, weight_bits)
-            x = jax.lax.conv_general_dilated(
-                x, w, (1, 1), "SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            ) + b
-            x = jax.nn.relu(x)
-            if act_bits:
-                x = fake_quant_unsigned(x, act_bits)
-            acts.append(x)
-        elif ly[0] == "pool":
-            p = ly[1]
+    for cp in plan.convs:
+        w, b = params[cp.index]["w"], params[cp.index]["b"]
+        if weight_bits:
+            w = fake_quant(w, weight_bits)
+        x = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + b
+        x = jax.nn.relu(x)
+        if act_bits:
+            x = fake_quant_unsigned(x, act_bits)
+        acts.append(x)
+        if cp.pool:
+            p = cp.pool
             B, H, W, C = x.shape
             Ho, Wo = H // p, W // p
-            x = x[:, : Ho * p, : Wo * p, :].reshape(B, Ho, p, Wo, p, C).max(axis=(2, 4))
-        else:  # dense
-            w, b = params[li]["w"], params[li]["b"]
-            if weight_bits:
-                w = fake_quant(w, weight_bits)
-            x = x.reshape(x.shape[0], -1) @ w + b
-            acts.append(x)
+            x = x[:, : Ho * p, : Wo * p, :].reshape(
+                B, Ho, p, Wo, p, C).max(axis=(2, 4))
+
+    w, b = params[plan.out.index]["w"], params[plan.out.index]["b"]
+    if weight_bits:
+        w = fake_quant(w, weight_bits)
+    x = x.reshape(x.shape[0], -1) @ w + b
+    acts.append(x)
 
     logits = x if batched else x[0]
     if return_acts:
@@ -75,26 +78,21 @@ def cnn_forward(
 def cnn_costs(params, spec: str, input_hw: int, input_c: int,
               weight_bits: int = 8, act_bits: int = 8) -> CNNCosts:
     """Static MAC/byte counts for the dense pipeline (input-independent)."""
-    layers = parse_spec(spec)
-    hw, c = input_hw, input_c
+    plan = compile_plan(spec, input_hw, input_c)
     macs = 0
-    act_bytes = hw * hw * c * act_bits // 8
+    act_bytes = input_hw * input_hw * input_c * act_bits // 8
     weight_bytes = 0
-    for li, ly in enumerate(layers):
-        if ly[0] == "conv":
-            k, cout = ly[2], ly[1]
-            macs += hw * hw * k * k * c * cout
-            weight_bytes += (k * k * c * cout * weight_bits) // 8 + cout * 4
-            c = cout
-            act_bytes += hw * hw * c * act_bits // 8
-        elif ly[0] == "pool":
-            hw = hw // ly[1]
-            act_bytes += hw * hw * c * act_bits // 8
-        else:
-            n_in = hw * hw * c
-            macs += n_in * ly[1]
-            weight_bytes += (n_in * ly[1] * weight_bits) // 8 + ly[1] * 4
-            hw, c = 1, ly[1]
+    for cp in plan.convs:
+        k = cp.kernel
+        macs += cp.in_hw * cp.in_hw * k * k * cp.in_c * cp.out_c
+        weight_bytes += (k * k * cp.in_c * cp.out_c * weight_bits) // 8 \
+            + cp.out_c * 4
+        act_bytes += cp.in_hw * cp.in_hw * cp.out_c * act_bits // 8
+        if cp.pool:
+            act_bytes += cp.out_hw * cp.out_hw * cp.out_c * act_bits // 8
+    macs += plan.out.n_in * plan.out.n_out
+    weight_bytes += (plan.out.n_in * plan.out.n_out * weight_bits) // 8 \
+        + plan.out.n_out * 4
     return CNNCosts(jnp.asarray(macs), weight_bytes, act_bytes)
 
 

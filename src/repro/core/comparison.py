@@ -16,10 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import conversion, encoding
+from . import conversion, encoding, engine
 from .cnn_baseline import cnn_costs, cnn_forward
 from .energy import EnergyBreakdown, cnn_energy, snn_energy
-from .snn_model import SNNConfig, snn_dense_infer_batch, snn_infer_batch
+from .snn_model import SNNConfig
 
 
 @dataclass
@@ -72,6 +72,7 @@ def run_study(
     input_mode: str = "analog",
     mode: str = "mttfs_cont",
     balance: bool = True,
+    backend: str | None = None,
     use_queues: bool = False,
     weight_bits: int = 8,
     vmem_resident: bool = True,
@@ -98,8 +99,11 @@ def run_study(
     e_cnn = cnn_energy(costs, bits=weight_bits)
 
     # --- SNN side (per-sample distributions) ---
-    infer_fn = snn_infer_batch if use_queues else snn_dense_infer_batch
-    infer = jax.jit(lambda ims: infer_fn(snn_params, thresholds, cfg, ims))
+    # any registered engine backend works here; `use_queues` is the legacy
+    # boolean spelling of backend="queue"
+    backend = backend or ("queue" if use_queues else "dense")
+    infer = lambda ims: engine.infer_batch(  # noqa: E731 — jit-cached in engine
+        snn_params, thresholds, cfg, ims, backend=backend)
     preds, energies, latencies, spikes, events, overflow = [], [], [], [], [], 0
     fmt = encoding.make_format(H, 3, compressed=compressed)
     wb = encoding.word_nbytes(fmt)

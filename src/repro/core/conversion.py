@@ -14,13 +14,18 @@ The paper converts Keras CNNs with snntoolbox [17] to m-TTFS SNNs and reports
 After normalization, every layer's activation is <= ~1 per time step, so IF
 neurons with unit threshold approximate the ReLU network; more time steps T
 refine the approximation (the paper uses T=4).
+
+Conversion walks the same compiled :class:`repro.core.engine.LayerPlan` as
+execution: the weighted-layer slots (conv stages + classifier) come from the
+plan, so the parameter/threshold pytrees line up with the engine by
+construction.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from .cnn_baseline import cnn_forward
-from .snn_model import parse_spec
+from .engine import compile_plan
 
 
 def calibrate_lambdas(params, spec: str, calib_images, percentile: float = 99.0):
@@ -34,22 +39,17 @@ def calibrate_lambdas(params, spec: str, calib_images, percentile: float = 99.0)
 def convert(params, spec: str, calib_images, percentile: float = 99.0):
     """Returns (snn_params, thresholds) — same pytree structure as params,
     with thresholds[li] = 1.0 for weighted layers (ignored for pools)."""
-    layers = parse_spec(spec)
+    plan = compile_plan(spec, int(calib_images.shape[1]),
+                        int(calib_images.shape[-1]))
     lams = calibrate_lambdas(params, spec, calib_images, percentile)
 
-    snn_params = []
-    thresholds = []
-    wi = 0  # index into lams (weighted layers only)
-    for li, ly in enumerate(layers):
-        if ly[0] == "pool":
-            snn_params.append({})
-            thresholds.append(jnp.asarray(1.0))
-            continue
+    snn_params: list[dict] = [{} for _ in range(plan.n_layers)]
+    thresholds = [jnp.asarray(1.0) for _ in range(plan.n_layers)]
+    weighted = [cp.index for cp in plan.convs] + [plan.out.index]
+    for wi, li in enumerate(weighted):
         w, b = params[li]["w"], params[li]["b"]
         lam_prev, lam = lams[wi], lams[wi + 1]
-        snn_params.append({"w": w * lam_prev / lam, "b": b / lam})
-        thresholds.append(jnp.asarray(1.0))
-        wi += 1
+        snn_params[li] = {"w": w * lam_prev / lam, "b": b / lam}
     return snn_params, thresholds
 
 
@@ -59,9 +59,14 @@ def balance_thresholds(
     cfg,
     cnn_params,
     calib_images,
-    grid=(0.25, 0.4, 0.55, 0.7, 0.85, 1.0, 1.25),
+    grid=(0.25, 0.4, 0.55, 0.7, 0.85, 1.0, 1.25, 1.5, 1.75, 2.0),
 ):
     """Greedy per-layer threshold balancing (Diehl et al. 2015 style).
+
+    The grid extends to 2.0: m-TTFS drive mismatch can require *raising*
+    thresholds well above the normalized V_t = 1 (the seed's grid topped out
+    at 1.25 and the coordinate descent saturated against that edge, costing
+    ~12 accuracy points on the MNIST-scale study).
 
     Data-based weight normalization assumes a spike *every* step at unit
     rate; the m-TTFS codes deliver fewer (spike-once: one total; continuous
@@ -73,9 +78,9 @@ def balance_thresholds(
     import jax
 
     from .cnn_baseline import cnn_forward
-    from .snn_model import parse_spec, snn_dense_infer_batch
+    from .snn_model import snn_dense_infer_batch
 
-    layers = parse_spec(cfg.spec)
+    plan = compile_plan(cfg.spec, cfg.input_hw, cfg.input_c, cfg.compressed)
     cnn_pred = jnp.argmax(
         cnn_forward(cnn_params, cfg.spec, calib_images), -1
     )
@@ -88,9 +93,8 @@ def balance_thresholds(
 
     ths = list(thresholds)
     for _pass in range(2):  # two coordinate-descent sweeps
-        for li, ly in enumerate(layers):
-            if ly[0] != "conv":
-                continue  # pools have no threshold; final dense never thresholds
+        for cp in plan.convs:  # pools have no threshold; final dense never thresholds
+            li = cp.index
             best_s, best_a = 1.0, -1.0
             for s in grid:
                 trial = list(ths)

@@ -95,6 +95,31 @@ def snn_energy(
     return EnergyBreakdown(compute, hbm, vmem, compute + hbm + vmem, latency)
 
 
+class SNNStaticCosts(NamedTuple):
+    """Input-independent SNN memory footprint, derived from the LayerPlan.
+
+    The analogue of the paper's Eq. 3-5 BRAM sizing, re-targeted: how many
+    bytes of queue (AEQ capacity) and membrane state each conv stage pins in
+    VMEM. Shares the compiled plan with the execution engine so sizing and
+    execution can never disagree about geometry.
+    """
+
+    queue_bytes: tuple      # per conv stage: T * C_in * K^2 * depth * word
+    state_bytes: tuple      # per conv stage: H * W * C_out * 4 (fp32 Vm)
+    total_queue_bytes: int
+    total_state_bytes: int
+
+
+def snn_static_costs(plan, *, T: int, depth: int, word_bytes: int = 1,
+                     state_bytes_per_neuron: int = 4) -> SNNStaticCosts:
+    """Static queue/membrane sizing for a compiled ``engine.LayerPlan``."""
+    q = tuple(T * cp.in_c * cp.kernel * cp.kernel * depth * word_bytes
+              for cp in plan.convs)
+    s = tuple(cp.in_hw * cp.in_hw * cp.out_c * state_bytes_per_neuron
+              for cp in plan.convs)
+    return SNNStaticCosts(q, s, sum(q), sum(s))
+
+
 def cnn_energy(
     costs,
     *,

@@ -1,0 +1,648 @@
+"""Compiled, backend-pluggable SNN execution engine.
+
+The paper's accelerator (Figs. 3-5) is a *layer pipeline*: a static per-layer
+plan (geometry, queue formats, thresholds) drives interchangeable compute
+units. This module is the software mirror of that structure:
+
+1. ``compile_plan`` turns a spec string ("32C3-P2-32C3-P2-10") into a static
+   :class:`LayerPlan` — validated once, hashable, cached — shared by the SNN
+   backends, the CNN baseline (``cnn_baseline``), ANN->SNN conversion
+   (``conversion``) and the energy model (``energy.snn_static_costs``).
+
+2. Neuron dynamics come from the step-function registry in ``core/neuron.py``
+   (``get_neuron_model``); there is no per-mode branching anywhere in the
+   execution paths, so a new neuron variant is a one-file change.
+
+3. Backends implement one hook — how a conv layer turns incoming events into
+   membrane charge — and everything else (spec walk, input encoding, fused
+   pooling, the output layer, stats accounting) is shared engine code:
+
+   - ``dense``          : per-layer currents via one T-batched XLA conv, time
+                          loop as ``jax.lax.scan`` (fast reference; what the
+                          studies and benchmarks use).
+   - ``dense_unrolled`` : the seed implementation's unrolled per-step Python
+                          loop, kept as a tracing/benchmark reference.
+   - ``queue``          : hardware-faithful AEQ path (``core/aeq`` +
+                          ``snn_layers.event_conv2d``).
+   - ``queue_pallas``   : same schedule, accumulation through the
+                          ``kernels/event_accum`` Pallas TPU kernel.
+
+Entry points ``infer`` / ``infer_batch`` are jit-compiled once per
+(config, backend, batched) triple and cached; ``snn_model.snn_infer`` /
+``snn_dense_infer`` are thin wrappers over them.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from . import encoding
+from .aeq import AEQ, aeq_from_raster, decode_positions
+from .encoding import AEFormat, encode_ttfs
+from .neuron import NeuronModel, _on_registry_change, get_neuron_model
+from .snn_layers import dense_conv_hwc, event_conv2d, spike_maxpool_hwc
+
+# Engine-internal raster layout: (T, H, W, C) — channels-last end to end, so
+# the dense path runs transpose-free (XLA convs are NHWC-native); the queue
+# backend moves to the AEQ's (T, C, H, W) view only at its queue boundary.
+
+
+class SpecError(ValueError):
+    """A malformed or structurally invalid model spec string."""
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing + validation (paper Table 6 grammar)
+# ---------------------------------------------------------------------------
+
+_CONV_RE = re.compile(r"^(\d+)C(\d+)$")
+_POOL_RE = re.compile(r"^P(\d+)$")
+_DENSE_RE = re.compile(r"^(\d+)$")
+
+
+def parse_spec(spec: str) -> list[tuple]:
+    """'32C3-32C3-P3-10C3-10' -> [('conv',32,3), ..., ('pool',3), ('dense',10)].
+
+    Grammar (paper Table 6): ``nCk`` conv (n kernels of k x k, SAME, stride
+    1), ``Pn`` max-pool (n x n, stride n, fused into the preceding conv's
+    emission), trailing ``n`` fully connected. Raises :class:`SpecError` with
+    the offending token on malformed input instead of failing deep inside
+    inference.
+    """
+    if not isinstance(spec, str) or not spec.strip():
+        raise SpecError(f"empty model spec {spec!r}")
+    tokens = spec.split("-")
+    layers: list[tuple] = []
+    seen_conv = False
+    for pos, tok in enumerate(tokens):
+        if tok == "":
+            where = ("leading" if pos == 0 else
+                     "trailing" if pos == len(tokens) - 1 else "doubled")
+            raise SpecError(f"{where} '-' in spec {spec!r}")
+        if layers and layers[-1][0] == "dense":
+            raise SpecError(
+                f"token {tok!r} after the dense output layer in {spec!r} "
+                "(the classifier must be the final token)")
+        if m := _CONV_RE.match(tok):
+            n, k = int(m.group(1)), int(m.group(2))
+            if n < 1 or k < 1:
+                raise SpecError(f"conv token {tok!r} in {spec!r}: "
+                                "channels and kernel must be >= 1")
+            if k % 2 == 0:
+                raise SpecError(
+                    f"conv token {tok!r} in {spec!r}: even kernels are not "
+                    "supported (SAME padding and the AEQ phase interlacing "
+                    "assume an odd kernel)")
+            layers.append(("conv", n, k))
+            seen_conv = True
+        elif m := _POOL_RE.match(tok):
+            if not seen_conv:
+                raise SpecError(
+                    f"pool token {tok!r} in {spec!r} before any conv layer "
+                    "(pooling is fused into a preceding conv's emission)")
+            if layers[-1][0] != "conv":
+                raise SpecError(
+                    f"pool token {tok!r} in {spec!r} must directly follow a "
+                    "conv layer (back-to-back pools cannot be fused)")
+            win = int(m.group(1))
+            if win < 1:
+                raise SpecError(f"pool token {tok!r} in {spec!r}: "
+                                "window must be >= 1")
+            layers.append(("pool", win))
+        elif m := _DENSE_RE.match(tok):
+            n = int(m.group(1))
+            if n < 1:
+                raise SpecError(f"dense token {tok!r} in {spec!r}: "
+                                "width must be >= 1")
+            layers.append(("dense", n))
+        else:
+            raise SpecError(
+                f"malformed token {tok!r} in spec {spec!r} "
+                "(expected nCk, Pn, or a trailing integer)")
+    return layers
+
+
+def layer_geometry(spec_layers, input_hw: int, input_c: int):
+    """Static shape walk: per layer -> (type, in_hw, in_c, out_hw, out_c)."""
+    hw, c = input_hw, input_c
+    geo = []
+    for ly in spec_layers:
+        if ly[0] == "conv":
+            geo.append(("conv", hw, c, hw, ly[1], ly[2]))
+            c = ly[1]
+        elif ly[0] == "pool":
+            out = hw // ly[1]
+            geo.append(("pool", hw, c, out, c, ly[1]))
+            hw = out
+        else:
+            n_in = hw * hw * c
+            geo.append(("dense", n_in, ly[1]))
+    return geo
+
+
+# ---------------------------------------------------------------------------
+# The compiled layer plan
+# ---------------------------------------------------------------------------
+
+class ConvPlan(NamedTuple):
+    """One conv stage (with its optional fused pool) of the pipeline."""
+
+    index: int          # token index in the spec == params/thresholds slot
+    in_hw: int          # input (== conv output) feature-map side
+    in_c: int
+    out_c: int
+    kernel: int
+    pool: int           # fused pool window (0 = no pool)
+    out_hw: int         # side after the fused pool
+    fmt: AEFormat       # AE word format of the *incoming* event queue
+
+
+class OutPlan(NamedTuple):
+    """The final fully-connected classifier (accumulates Vm, no threshold)."""
+
+    index: int
+    n_in: int
+    n_out: int
+
+
+class LayerPlan(NamedTuple):
+    """Static execution plan for a spec — hashable, cached, backend-agnostic."""
+
+    spec: str
+    input_hw: int
+    input_c: int
+    compressed: bool
+    n_layers: int                  # spec token count == len(params)
+    convs: tuple[ConvPlan, ...]
+    out: OutPlan
+
+
+@functools.lru_cache(maxsize=None)
+def compile_plan(
+    spec: str, input_hw: int, input_c: int, compressed: bool = True
+) -> LayerPlan:
+    """Compile + validate ``spec`` for a given input geometry, once.
+
+    The result is a pure-static NamedTuple (ints and formats only), so it is
+    hashable and safely shared across jit traces, backends, and modules.
+    """
+    layers = parse_spec(spec)
+    if layers[-1][0] != "dense":
+        raise SpecError(
+            f"spec {spec!r} must end with a dense classifier layer")
+    if layers[0][0] != "conv":
+        raise SpecError(f"spec {spec!r} must start with a conv layer")
+
+    hw, c = input_hw, input_c
+    convs: list[ConvPlan] = []
+    li = 0
+    while li < len(layers) - 1:
+        ly = layers[li]
+        # parse_spec guarantees only conv (+ directly-following pool) here
+        cout, k = ly[1], ly[2]
+        if k > hw:
+            raise SpecError(
+                f"spec {spec!r} layer {li}: kernel {k} exceeds the "
+                f"{hw}x{hw} feature map")
+        pool = 0
+        if li + 1 < len(layers) - 1 and layers[li + 1][0] == "pool":
+            pool = layers[li + 1][1]
+            if pool > hw:
+                raise SpecError(
+                    f"spec {spec!r} layer {li + 1}: pool window {pool} "
+                    f"exceeds the {hw}x{hw} feature map")
+        out_hw = hw // pool if pool else hw
+        convs.append(ConvPlan(
+            index=li, in_hw=hw, in_c=c, out_c=cout, kernel=k,
+            pool=pool, out_hw=out_hw,
+            fmt=encoding.make_format(hw, k, compressed=compressed),
+        ))
+        c = cout
+        hw = out_hw
+        li += 2 if pool else 1
+
+    n_in = hw * hw * c
+    out = OutPlan(index=len(layers) - 1, n_in=n_in, n_out=layers[-1][1])
+    return LayerPlan(
+        spec=spec, input_hw=input_hw, input_c=input_c, compressed=compressed,
+        n_layers=len(layers), convs=tuple(convs), out=out,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Configuration + statistics
+# ---------------------------------------------------------------------------
+
+class SNNConfig(NamedTuple):
+    spec: str
+    input_hw: int
+    input_c: int
+    T: int = 4                 # algorithmic time steps (paper: T=4)
+    mode: str = "mttfs"        # neuron model variant (core/neuron.py registry)
+    depth: int = 256           # AEQ depth D per (t, c, phase) segment
+    compressed: bool = True    # compressed AE encoding (Sec. 5.2)
+    input_mode: str = "analog" # 'analog' (snntoolbox current) | 'binary' (TTFS events)
+    input_theta: float = 0.1   # threshold for binary input encoding
+    v_init_frac: float = 0.5   # initial charge as a fraction of V_t (Rueckauer:
+                               # centers the spike-count quantizer, round-vs-floor)
+
+
+class SNNStats(NamedTuple):
+    """Per-sample accounting used by the energy model and Figs. 7-9/12-15."""
+
+    events_in: jnp.ndarray    # (L,) events consumed per conv layer (all t)
+    spikes_out: jnp.ndarray   # (L,) spikes emitted per layer
+    add_ops: jnp.ndarray      # (L,) scalar accumulations performed
+    overflow: jnp.ndarray     # () dropped events across all AEQs
+    queue_words: jnp.ndarray  # (L,) peak words resident per layer queue
+
+
+class LayerStats(NamedTuple):
+    """One stats row (one weighted layer); stacked into :class:`SNNStats`."""
+
+    events_in: jnp.ndarray
+    spikes_out: jnp.ndarray
+    add_ops: jnp.ndarray
+    queue_words: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+def _zero() -> jnp.ndarray:
+    return jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Shared stat helpers (identical numbers on every backend)
+# ---------------------------------------------------------------------------
+
+def _valid_offsets_map(hw: int, K: int) -> jnp.ndarray:
+    """(hw, hw) map: number of in-bounds kernel offsets per spike position."""
+    ones = jnp.ones((1, 1, hw, hw))
+    kern = jnp.ones((K, K, 1, 1))
+    return jax.lax.conv_general_dilated(
+        ones, kern, (1, 1), "SAME", dimension_numbers=("NCHW", "HWIO", "NHWC")
+    )[0, :, :, 0]
+
+
+def _segment_occupancy(fmt: AEFormat, raster: jnp.ndarray) -> jnp.ndarray:
+    """(T, H, W, C) raster -> (T, K, K, C) per-(t, phase, c) event counts.
+
+    A spike at (y, x) lands in phase (y mod K)*K + (x mod K), so the segment
+    occupancy is one pad + reshape + sum over the window grid — no per-map
+    phase splitting (this sits on the hot dense path; ``aeq._phase_split``
+    remains the word-level model the queues use).
+    """
+    K, n = fmt.kernel, fmt.n_win
+    T, H, W, C = raster.shape
+    m = jnp.pad(raster,
+                ((0, 0), (0, n * K - H), (0, n * K - W), (0, 0)))
+    occ = m.reshape(T, n, K, n, K, C).sum(axis=(1, 3))      # (T, K, K, C)
+    return occ.astype(jnp.int32)
+
+
+def _event_op_count(fmt: AEFormat, words_t: jnp.ndarray, counts_t: jnp.ndarray,
+                    hw: int, c_out: int) -> jnp.ndarray:
+    """Adds an event-driven engine issues for one queue segment.
+
+    Equals ``sum over queued events of (#in-bounds kernel offsets) * C_out`` —
+    the same number ``event_conv2d`` counts while accumulating; computed
+    analytically here for accumulators (the Pallas kernel) that do not
+    report it.
+    """
+    K = fmt.kernel
+    pad = K // 2
+    y, x, valid = jax.vmap(lambda w: decode_positions(fmt, w))(words_t)
+    slot = jnp.arange(words_t.shape[-1], dtype=jnp.int32)
+    live = valid & (slot[None, None, :] < counts_t[..., None])
+
+    def span(p):  # offsets d in [0, K) with 0 <= p - d + pad < hw
+        lo = jnp.maximum(0, p + pad - hw + 1)
+        hi = jnp.minimum(K - 1, p + pad)
+        return jnp.maximum(hi - lo + 1, 0)
+
+    per_event = span(y) * span(x)
+    return (per_event * live).sum().astype(jnp.int32) * c_out
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class Backend(Protocol):
+    """A compute unit for one conv stage of the layer pipeline.
+
+    ``conv_layer`` receives the static :class:`ConvPlan`, this layer's
+    parameters, and the incoming activity — either a (T, H, W, C) spike
+    ``raster`` or an ``analog`` (H, W, C) constant-current image (exactly one
+    is non-None) — and returns the emitted (T, H', W', C_out) raster plus its
+    :class:`LayerStats` row. Neuron dynamics MUST come from
+    ``neuron.get_neuron_model(cfg.mode)`` so all backends stay in lockstep.
+    """
+
+    name: str
+
+    def conv_layer(
+        self, cp: ConvPlan, w, b, vth, cfg: SNNConfig, raster, analog
+    ) -> tuple[jnp.ndarray, LayerStats]:
+        ...
+
+
+def _conv_step(cp: ConvPlan, model: NeuronModel, vth):
+    """Shared per-time-step body: integrate -> fire -> (fused) pool.
+
+    Returns ``step(carry, current) -> (carry, spikes_hwc)``, where
+    ``current`` already includes the bias term; used by the scanned dense
+    backend and the event-queue backends alike — the neuron/pool semantics
+    exist once.
+    """
+
+    def step(carry, cur_t):
+        if cp.pool:
+            v, latch, p_latch = carry
+        else:
+            v, latch = carry
+        v = v + cur_t
+        v, sp, latch = model.fire(v, latch, vth)
+        sp = sp.astype(v.dtype)                            # (H, W, C_out)
+        if cp.pool:
+            sp, p_latch = spike_maxpool_hwc(
+                sp, cp.pool, p_latch, latch_once=model.pool_latch_once)
+            return (v, latch, p_latch), sp
+        return (v, latch), sp
+
+    return step
+
+
+def _init_carry(cp: ConvPlan, cfg: SNNConfig, vth, dtype):
+    v = jnp.full((cp.in_hw, cp.in_hw, cp.out_c),
+                 cfg.v_init_frac * jnp.asarray(vth, dtype), dtype)
+    latch = jnp.zeros((cp.in_hw, cp.in_hw, cp.out_c), jnp.bool_)
+    if cp.pool:
+        p_latch = jnp.zeros((cp.out_hw, cp.out_hw, cp.out_c), jnp.bool_)
+        return (v, latch, p_latch)
+    return (v, latch)
+
+
+class DenseBackend:
+    """Dense-dynamics reference: one T-batched conv + ``lax.scan`` time loop.
+
+    Identical mathematics to the queue path (event-driven accumulation of a
+    spike raster == dense convolution of it), so every queue statistic is
+    *derivable* from the rasters: events = spike counts, add_ops = sum over
+    spikes of in-bounds kernel offsets * C_out, queue words/overflow = per-
+    (t, c, phase) segment occupancy vs. depth. ~100x faster on CPU; what
+    studies and benchmarks use.
+
+    The time loop is ``jax.lax.scan`` over the T-batched currents with
+    ``scan_unroll`` steps inlined per loop iteration (default: fully
+    unrolled at the XLA level) — one traced body regardless of T, with the
+    cross-step fusion of hand-unrolled code. ``unroll=True`` instead
+    reproduces the seed's per-step Python loop + per-step convs (kept as
+    the tracing/benchmark reference).
+    """
+
+    def __init__(self, unroll: bool = False, scan_unroll: int | bool = True):
+        self.unroll = unroll
+        self.scan_unroll = scan_unroll
+        self.name = "dense_unrolled" if unroll else "dense"
+
+    def conv_layer(self, cp, w, b, vth, cfg, raster, analog):
+        model = get_neuron_model(cfg.mode)
+        T = cfg.T
+
+        if raster is not None:
+            occ = _segment_occupancy(cp.fmt, raster)
+            q_words = occ.sum().astype(jnp.int32)
+            ovf = jnp.maximum(occ - cfg.depth, 0).sum().astype(jnp.int32)
+            ev = raster.sum().astype(jnp.int32)
+            per_spike = _valid_offsets_map(cp.in_hw, cp.kernel)
+            ops = ((raster * per_spike[None, :, :, None]).sum()
+                   * cp.out_c).astype(jnp.int32)
+        else:
+            q_words, ovf, ev = _zero(), _zero(), _zero()
+            ops = jnp.int32(
+                T * analog.size * cp.out_c * cp.kernel * cp.kernel)
+
+        step = _conv_step(cp, model, vth)
+        carry = _init_carry(cp, cfg, vth, w.dtype)
+
+        if self.unroll:
+            # seed-style: one conv trace per time step, Python-unrolled
+            frames = []
+            for t in range(T):
+                cur_t = (dense_conv_hwc(raster[t], w)
+                         if raster is not None else dense_conv_hwc(analog, w))
+                carry, sp = step(carry, cur_t + b)
+                frames.append(sp)
+            out_raster = jnp.stack(frames)
+        else:
+            if raster is not None:
+                # all T steps in one batched conv (T is the batch axis)
+                cur = jax.lax.conv_general_dilated(
+                    raster.astype(w.dtype), w, (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+            else:
+                c1 = dense_conv_hwc(analog, w) + b
+                cur = jnp.broadcast_to(c1, (T,) + c1.shape)
+            _, out_raster = jax.lax.scan(step, carry, cur,
+                                         unroll=self.scan_unroll)
+
+        row = LayerStats(ev, out_raster.sum().astype(jnp.int32), ops,
+                         q_words, ovf)
+        return out_raster, row
+
+
+class QueueBackend:
+    """Hardware-faithful path: events flow through per-(t, c, phase) AEQs.
+
+    Faithful points (paper Sec. 3.1/4): spike-once latches via the neuron
+    registry, no reset, bias as constant input current each step, pooling
+    fused into emission, segmented fixed-depth queues, layer-by-layer
+    T-repetition schedule. ``accum='pallas'`` routes the accumulation through
+    the ``kernels/event_accum`` TPU kernel instead of the pure-JAX reference.
+    """
+
+    def __init__(self, accum: str = "jax"):
+        if accum not in ("jax", "pallas"):
+            raise ValueError(f"accum must be 'jax' or 'pallas', got {accum!r}")
+        self.accum = accum
+        self.name = "queue" if accum == "jax" else "queue_pallas"
+
+    def _accumulate(self, cp, v, w, q: AEQ, t):
+        if self.accum == "jax":
+            return event_conv2d(v, w, q, cp.fmt, t)
+        from ..kernels import ops as kops
+
+        v = kops.event_accum(
+            q.words[t], q.counts[t], w, v,
+            K=cp.kernel, n_win=cp.fmt.n_win, bits=cp.fmt.bits_coord)
+        n = _event_op_count(cp.fmt, q.words[t], q.counts[t],
+                            cp.in_hw, cp.out_c)
+        return v, n
+
+    def conv_layer(self, cp, w, b, vth, cfg, raster, analog):
+        model = get_neuron_model(cfg.mode)
+        T = cfg.T
+
+        if raster is not None:
+            # the AEQ's segmented view is (T, C, K2, depth): move to the
+            # channel-major raster only at the queue boundary
+            q = aeq_from_raster(cp.fmt, jnp.moveaxis(raster, -1, 1),
+                                cfg.depth)
+            ev = q.counts.sum().astype(jnp.int32)
+            q_words = ev
+            ovf = q.overflow.astype(jnp.int32)
+        else:
+            q = None
+            ev, q_words, ovf = _zero(), _zero(), _zero()
+
+        step = _conv_step(cp, model, vth)
+        carry = _init_carry(cp, cfg, vth, w.dtype)
+        ops = _zero()
+        frames = []
+        for t in range(T):
+            if q is not None:
+                # event-driven: accumulate queued spikes into the membrane,
+                # then step with just the constant bias current
+                v, n = self._accumulate(cp, carry[0], w, q, t)
+                carry = (v, *carry[1:])
+                cur_t = jnp.broadcast_to(b, v.shape)
+                ops = ops + n
+            else:
+                cur_t = dense_conv_hwc(analog, w) + b
+                ops = ops + jnp.int32(
+                    analog.size * cp.out_c * cp.kernel * cp.kernel)
+            carry, sp = step(carry, cur_t)
+            frames.append(sp)
+        out_raster = jnp.stack(frames)
+
+        row = LayerStats(ev, out_raster.sum().astype(jnp.int32), ops,
+                         q_words, ovf)
+        return out_raster, row
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend, *, overwrite: bool = False):
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _BACKENDS[name] = backend
+    _runner.cache_clear()  # a new backend may shadow a cached name
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{sorted(_BACKENDS)}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+# ---------------------------------------------------------------------------
+# Shared execution driver
+# ---------------------------------------------------------------------------
+
+def _output_layer(params_out, T: int, raster: jnp.ndarray):
+    """Final dense layer: accumulate Vm over all T steps, no thresholding.
+
+    Shared verbatim by every backend — the event-driven accumulation of the
+    spike raster and the vectorized matmul are the same arithmetic, and the
+    stats (events = spikes arriving, adds = events * N_out) are identical.
+    """
+    w, b = params_out["w"], params_out["b"]
+    flat = raster.reshape(T, -1)                        # (T, HWC order)
+    logits = (flat @ w).sum(0) + b * T
+    ev = (flat > 0).sum().astype(jnp.int32)
+    row = LayerStats(ev, _zero(), ev * jnp.int32(w.shape[1]), _zero(), _zero())
+    return logits, row
+
+
+def _encode_input(cfg: SNNConfig, image: jnp.ndarray):
+    # (H, W, C) stays channels-last: encodings are elementwise
+    if cfg.input_mode == "binary":
+        return encode_ttfs(image, cfg.T, cfg.input_theta), None
+    if cfg.input_mode == "analog":
+        return None, image
+    raise ValueError(
+        f"unknown input_mode {cfg.input_mode!r} (expected 'analog' or 'binary')")
+
+
+def _execute(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
+             params, thresholds, image):
+    if len(params) != plan.n_layers:
+        raise ValueError(
+            f"params pytree has {len(params)} layers but spec "
+            f"{plan.spec!r} has {plan.n_layers}")
+    if len(thresholds) != plan.n_layers:
+        raise ValueError(
+            f"thresholds list has {len(thresholds)} entries but spec "
+            f"{plan.spec!r} has {plan.n_layers} layers")
+
+    raster, analog = _encode_input(cfg, image)
+    rows: list[LayerStats] = []
+    for cp in plan.convs:
+        w, b = params[cp.index]["w"], params[cp.index]["b"]
+        raster, row = backend.conv_layer(
+            cp, w, b, thresholds[cp.index], cfg, raster, analog)
+        analog = None
+        rows.append(row)
+
+    logits, row = _output_layer(params[plan.out.index], cfg.T, raster)
+    rows.append(row)
+
+    stats = SNNStats(
+        events_in=jnp.stack([r.events_in for r in rows]),
+        spikes_out=jnp.stack([r.spikes_out for r in rows]),
+        add_ops=jnp.stack([r.add_ops for r in rows]),
+        overflow=sum((r.overflow for r in rows), _zero()),
+        queue_words=jnp.stack([r.queue_words for r in rows]),
+    )
+    return logits, stats
+
+
+@functools.lru_cache(maxsize=None)
+def _runner(cfg: SNNConfig, backend_name: str, batched: bool):
+    """One jit-compiled executable per (config, backend, batched) triple."""
+    backend = get_backend(backend_name)
+    plan = compile_plan(cfg.spec, cfg.input_hw, cfg.input_c, cfg.compressed)
+
+    def run(params, thresholds, image):
+        return _execute(plan, backend, cfg, params, tuple(thresholds), image)
+
+    if batched:
+        run = jax.vmap(run, in_axes=(None, None, 0))
+    return jax.jit(run)
+
+
+def infer(params, thresholds, cfg: SNNConfig, image, *,
+          backend: str = "dense"):
+    """Run one (H, W, C) sample; returns ``(logits, SNNStats)``."""
+    return _runner(cfg, backend, False)(params, tuple(thresholds), image)
+
+
+def infer_batch(params, thresholds, cfg: SNNConfig, images, *,
+                backend: str = "dense"):
+    """Run a (N, H, W, C) batch (vmapped); returns batched (logits, stats)."""
+    return _runner(cfg, backend, True)(params, tuple(thresholds), images)
+
+
+register_backend("dense", DenseBackend())
+register_backend("dense_unrolled", DenseBackend(unroll=True))
+register_backend("queue", QueueBackend())
+register_backend("queue_pallas", QueueBackend(accum="pallas"))
+
+# a re-registered neuron mode must invalidate compiled runners too, or a
+# cached executable would keep executing the old fire function
+_on_registry_change.append(_runner.cache_clear)

@@ -1,26 +1,131 @@
-"""Integrate-and-Fire neuron dynamics (paper Eq. 1-2).
+"""Integrate-and-Fire neuron dynamics (paper Eq. 1-2) as a pluggable registry.
 
 The paper uses the IF model *without* leakage (hardware-friendliness) and the
 m-TTFS encoding variant of Sommer et al. [4]: a neuron may spike at most once
 and its membrane potential is NOT reset after crossing the threshold.
 
-Three variants are provided:
+Three variants ship built-in:
 
 - ``if_reset``   : classic IF, Eq. (1)-(2): reset to 0 after a spike.
 - ``mttfs``      : spike-once latch, no reset (the paper's accelerator model).
 - ``mttfs_cont`` : Han & Roy [11] variant — continuous emission once the
                    threshold has been crossed (kept for completeness).
 
+Every execution path (the dense ``lax.scan`` backend, the AEQ queue backend,
+``if_step`` below) dispatches through :data:`get_neuron_model`, so adding a
+neuron variant is a one-file change: write a fire function and call
+:func:`register_neuron_model` — the engine, both backends, and the stats
+accounting pick it up without modification.
+
 All functions are pure and jit/vmap/scan friendly.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
 
-MODES = ("if_reset", "mttfs", "mttfs_cont")
+# fire(v_mem_after_input, latch, v_thresh) -> (v_mem, spikes_bool, latch)
+FireFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                  tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
 
+
+class NeuronModel(NamedTuple):
+    """A registered neuron variant.
+
+    ``fire`` consumes the membrane *after* the step's input current has been
+    integrated and returns ``(new_v, spike_mask, new_latch)``; ``spike_mask``
+    is boolean, ``latch`` records neurons that have ever crossed threshold.
+
+    ``pool_latch_once`` tells the fused max-pool whether a pooled output may
+    fire only once (spike-once codes) or passes the OR through every step.
+    """
+
+    name: str
+    fire: FireFn
+    pool_latch_once: bool
+
+
+_REGISTRY: dict[str, NeuronModel] = {}
+
+# Callbacks run whenever the registry changes — the engine hooks its
+# compiled-runner cache invalidation here (it imports us, not vice versa),
+# so re-registering a mode can never leave a stale jitted executable behind.
+_on_registry_change: list[Callable[[], None]] = []
+
+
+def register_neuron_model(
+    name: str,
+    fire: FireFn,
+    *,
+    pool_latch_once: bool = False,
+    overwrite: bool = False,
+) -> NeuronModel:
+    """Register a neuron variant under ``name`` for use as ``SNNConfig.mode``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"neuron mode {name!r} already registered")
+    model = NeuronModel(name=name, fire=fire, pool_latch_once=pool_latch_once)
+    _REGISTRY[name] = model
+    for hook in _on_registry_change:
+        hook()
+    return model
+
+
+def unregister_neuron_model(name: str) -> None:
+    """Remove a registered variant (no-op if absent); invalidates caches."""
+    if _REGISTRY.pop(name, None) is not None:
+        for hook in _on_registry_change:
+            hook()
+
+
+def get_neuron_model(name: str) -> NeuronModel:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown neuron mode {name!r}; registered modes: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_modes() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-in variants
+# ---------------------------------------------------------------------------
+
+def _fire_if_reset(v, latch, vth):
+    crossed = v > jnp.asarray(vth, v.dtype)
+    v = jnp.where(crossed, jnp.zeros_like(v), v)
+    return v, crossed, latch | crossed
+
+
+def _fire_mttfs(v, latch, vth):
+    # paper Sec. 4: spike at most once, no reset; membrane keeps integrating.
+    crossed = v > jnp.asarray(vth, v.dtype)
+    return v, crossed & ~latch, latch | crossed
+
+
+def _fire_mttfs_cont(v, latch, vth):
+    # Han & Roy [11]: continuous emission once crossed.
+    crossed = v > jnp.asarray(vth, v.dtype)
+    return v, crossed, latch | crossed
+
+
+register_neuron_model("if_reset", _fire_if_reset)
+register_neuron_model("mttfs", _fire_mttfs, pool_latch_once=True)
+register_neuron_model("mttfs_cont", _fire_mttfs_cont)
+
+# import-time snapshot of the built-ins, derived from the registry so a new
+# built-in automatically joins every MODES-parametrized test sweep
+MODES = tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Stateful convenience API (kept for tests / external callers)
+# ---------------------------------------------------------------------------
 
 class IFState(NamedTuple):
     """State of a population of IF neurons (any array shape)."""
@@ -52,28 +157,14 @@ def if_step(
 
     Returns ``(new_state, spikes)`` with ``spikes`` a float array of 0/1.
     """
-    if mode not in MODES:
-        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    model = get_neuron_model(mode)
 
     v = state.v_mem + input_current
     if leak:
         # leaky-IF extension (Sec. 2.1.1); disabled (leak=0) in the paper.
         v = v - jnp.asarray(leak, v.dtype)
 
-    crossed = v > jnp.asarray(v_thresh, v.dtype)
-
-    if mode == "if_reset":
-        spikes = crossed
-        v = jnp.where(crossed, jnp.zeros_like(v), v)
-        latch = state.has_spiked  # unused in this mode
-    elif mode == "mttfs":
-        # spike exactly once; membrane keeps integrating but never re-fires.
-        spikes = crossed & ~state.has_spiked
-        latch = state.has_spiked | crossed
-    else:  # mttfs_cont
-        spikes = crossed
-        latch = state.has_spiked | crossed
-
+    v, spikes, latch = model.fire(v, state.has_spiked, v_thresh)
     return IFState(v_mem=v, has_spiked=latch), spikes.astype(v.dtype)
 
 
@@ -86,8 +177,9 @@ def if_run(
 ) -> jnp.ndarray:
     """Run T steps from a zero state, returning the (T, *shape) spike raster.
 
-    Reference implementation used by tests and the dense oracle; the
-    accelerator path in ``snn_model.py`` interleaves this with event queues.
+    Reference implementation used by tests and the dense oracle; the engine
+    backends in ``core/engine.py`` interleave the same fire functions with
+    event queues or scanned dense convolutions.
     """
     import jax
 

@@ -106,6 +106,42 @@ def spike_maxpool(
     return fired.astype(spikes.dtype), latch | (s > 0)
 
 
+def spike_maxpool_hwc(
+    spikes: jnp.ndarray,      # (H, W, C) 0/1 spikes at one time step
+    window: int,
+    latch: jnp.ndarray,       # (H_out, W_out, C) bool — already-fired outputs
+    *,
+    latch_once: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`spike_maxpool` in the engine's channels-last layout.
+
+    Same OR-pooling semantics; HWC avoids the per-step transpose on the
+    engine's hot path (XLA CPU/TPU convs are channels-last native).
+    """
+    H, W, C = spikes.shape
+    Ho, Wo = H // window, W // window
+    s = spikes[: Ho * window, : Wo * window, :]
+    s = s.reshape(Ho, window, Wo, window, C).max(axis=(1, 3))
+    if latch_once:
+        fired = (s > 0) & ~latch
+    else:
+        fired = s > 0
+    return fired.astype(spikes.dtype), latch | (s > 0)
+
+
+def dense_conv_hwc(spike_map: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Dense SAME conv of an (H, W, C) map -> (H, W, C_out), channels-last
+    end to end (the engine's native layout)."""
+    out = jax.lax.conv_general_dilated(
+        spike_map[None].astype(weights.dtype),
+        weights,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0]
+
+
 def dense_conv_oracle(spike_map: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     """Dense SAME conv of a (C, H, W) spike map -> (H, W, C_out). Oracle for
     event_conv2d (tests assert allclose)."""

@@ -10,84 +10,60 @@ Spec grammar (paper Table 6):  "32C3-32C3-P3-10C3-10"
 Verified against the paper: this geometry reproduces Table 6's parameter
 counts exactly for MNIST (20,568) and CIFAR-10 (446,122); SVHN differs by 24
 params (297,990 vs. 297,966 — bias bookkeeping in the paper's Keras dump).
+
+Execution lives in :mod:`repro.core.engine` — a single compiled layer plan
+driving pluggable backends. ``snn_infer`` (the hardware-faithful AEQ path)
+and ``snn_dense_infer`` (the fast dense reference) are thin wrappers over the
+same engine, so parity between them is structural, not duplicated code.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from . import encoding
-from .aeq import AEQ, aeq_from_raster, aeq_init, aeq_set_segment, decode_positions
-from .encoding import AEFormat, encode_ttfs
-from .snn_layers import event_conv2d, event_dense, spike_maxpool
+# Re-exports: the public spec/config/stat types live in the engine now.
+from .engine import (  # noqa: F401
+    LayerPlan,
+    SNNConfig,
+    SNNStats,
+    SpecError,
+    compile_plan,
+    infer,
+    infer_batch,
+    layer_geometry,
+    parse_spec,
+)
 
 
 # ---------------------------------------------------------------------------
-# Spec parsing
+# Parameter initialization (CNN/SNN shared pytree)
 # ---------------------------------------------------------------------------
-
-def parse_spec(spec: str) -> list[tuple]:
-    """'32C3-32C3-P3-10C3-10' -> [('conv',32,3), ..., ('pool',3), ('dense',10)]."""
-    layers: list[tuple] = []
-    for tok in spec.split("-"):
-        if "C" in tok:
-            n, k = tok.split("C")
-            layers.append(("conv", int(n), int(k)))
-        elif tok.startswith("P"):
-            layers.append(("pool", int(tok[1:])))
-        else:
-            layers.append(("dense", int(tok)))
-    return layers
-
-
-def layer_geometry(spec_layers, input_hw: int, input_c: int):
-    """Static shape walk: per layer -> (type, in_hw, in_c, out_hw, out_c)."""
-    hw, c = input_hw, input_c
-    geo = []
-    for ly in spec_layers:
-        if ly[0] == "conv":
-            geo.append(("conv", hw, c, hw, ly[1], ly[2]))
-            c = ly[1]
-        elif ly[0] == "pool":
-            out = hw // ly[1]
-            geo.append(("pool", hw, c, out, c, ly[1]))
-            hw = out
-        else:
-            n_in = hw * hw * c
-            geo.append(("dense", n_in, ly[1]))
-    return geo
-
 
 def init_params(key, spec: str, input_hw: int, input_c: int, scale: float = 0.1):
     """He-style init for the CNN/SNN shared parameter pytree."""
-    layers = parse_spec(spec)
-    geo = layer_geometry(layers, input_hw, input_c)
-    params = []
-    for g in geo:
-        if g[0] == "conv":
-            _, _, cin, _, cout, k = g
-            key, sub = jax.random.split(key)
-            fan_in = k * k * cin
-            w = jax.random.normal(sub, (k, k, cin, cout)) * math.sqrt(2.0 / fan_in)
-            if cout < 4:
-                # ultra-narrow bottlenecks (the SVHN spec's 1C3 grayscale
-                # converter) have no channel redundancy: a random zero-mean
-                # filter is ReLU-dead for ~half the seeds and can never
-                # recover. Fold to positive weights — the layer starts as a
-                # luminance-style transform and stays trainable.
-                w = jnp.abs(w)
-            # small positive bias helps all narrow layers avoid dead ReLU
-            params.append({"w": w, "b": jnp.full((cout,), 0.05)})
-        elif g[0] == "dense":
-            _, n_in, n_out = g
-            key, sub = jax.random.split(key)
-            w = jax.random.normal(sub, (n_in, n_out)) * math.sqrt(2.0 / n_in)
-            params.append({"w": w, "b": jnp.zeros((n_out,))})
-        else:
-            params.append({})
+    plan = compile_plan(spec, input_hw, input_c)
+    params: list[dict] = [{} for _ in range(plan.n_layers)]
+    for cp in plan.convs:
+        key, sub = jax.random.split(key)
+        fan_in = cp.kernel * cp.kernel * cp.in_c
+        w = jax.random.normal(
+            sub, (cp.kernel, cp.kernel, cp.in_c, cp.out_c)
+        ) * math.sqrt(2.0 / fan_in)
+        if cp.out_c < 4:
+            # ultra-narrow bottlenecks (the SVHN spec's 1C3 grayscale
+            # converter) have no channel redundancy: a random zero-mean
+            # filter is ReLU-dead for ~half the seeds and can never
+            # recover. Fold to positive weights — the layer starts as a
+            # luminance-style transform and stays trainable.
+            w = jnp.abs(w)
+        # small positive bias helps all narrow layers avoid dead ReLU
+        params[cp.index] = {"w": w, "b": jnp.full((cp.out_c,), 0.05)}
+    key, sub = jax.random.split(key)
+    w = jax.random.normal(sub, (plan.out.n_in, plan.out.n_out)) * math.sqrt(
+        2.0 / plan.out.n_in)
+    params[plan.out.index] = {"w": w, "b": jnp.zeros((plan.out.n_out,))}
     return params
 
 
@@ -96,32 +72,8 @@ def count_params(params) -> int:
 
 
 # ---------------------------------------------------------------------------
-# SNN configuration + execution
+# Inference wrappers (one engine, two backends)
 # ---------------------------------------------------------------------------
-
-class SNNConfig(NamedTuple):
-    spec: str
-    input_hw: int
-    input_c: int
-    T: int = 4                 # algorithmic time steps (paper: T=4)
-    mode: str = "mttfs"        # neuron model variant
-    depth: int = 256           # AEQ depth D per (t, c, phase) segment
-    compressed: bool = True    # compressed AE encoding (Sec. 5.2)
-    input_mode: str = "analog" # 'analog' (snntoolbox current) | 'binary' (TTFS events)
-    input_theta: float = 0.1   # threshold for binary input encoding
-    v_init_frac: float = 0.5   # initial charge as a fraction of V_t (Rueckauer:
-                               # centers the spike-count quantizer, round-vs-floor)
-
-
-class SNNStats(NamedTuple):
-    """Per-sample accounting used by the energy model and Figs. 7-9/12-15."""
-
-    events_in: jnp.ndarray    # (L,) events consumed per conv layer (all t)
-    spikes_out: jnp.ndarray   # (L,) spikes emitted per layer
-    add_ops: jnp.ndarray      # (L,) scalar accumulations performed
-    overflow: jnp.ndarray     # () dropped events across all AEQs
-    queue_words: jnp.ndarray  # (L,) peak words resident per layer queue
-
 
 def snn_infer(params, thresholds, cfg: SNNConfig, image: jnp.ndarray):
     """Run one sample through the converted SNN, accelerator-style.
@@ -132,275 +84,21 @@ def snn_infer(params, thresholds, cfg: SNNConfig, image: jnp.ndarray):
     input current each step, pooling fused into emission, per-(t, c, phase)
     segmented fixed-depth queues, layer-by-layer T-repetition schedule.
     """
-    layers = parse_spec(cfg.spec)
-    T = cfg.T
-    hw, c = cfg.input_hw, cfg.input_c
-
-    events_in, spikes_out, add_ops, queue_words = [], [], [], []
-    overflow = jnp.zeros((), jnp.int32)
-
-    # ---- input encoding -> first AEQ (or analog currents) ----
-    chw = jnp.moveaxis(image, -1, 0)  # (C, H, W)
-    if cfg.input_mode == "binary":
-        raster = encode_ttfs(chw, T, cfg.input_theta)         # (T, C, H, W)
-        analog = None
-    else:
-        raster = None
-        analog = chw                                          # constant current
-
-    fmt = None
-    aeq: AEQ | None = None
-    li = 0
-    while li < len(layers):
-        ly = layers[li]
-        if ly[0] == "conv":
-            cout, K = ly[1], ly[2]
-            fmt = encoding.make_format(hw, K, compressed=cfg.compressed)
-            if raster is not None:
-                aeq = aeq_from_raster(fmt, raster, cfg.depth)
-                overflow = overflow + aeq.overflow
-                queue_words.append(aeq.counts.sum())
-                layer_events = aeq.counts.sum()
-            else:
-                aeq = None
-                layer_events = jnp.zeros((), jnp.int32)
-
-            w, b = params[li]["w"], params[li]["b"]
-            vth = thresholds[li]
-            v = jnp.full((hw, hw, cout), cfg.v_init_frac * vth, w.dtype)
-            latch = jnp.zeros((hw, hw, cout), jnp.bool_)
-
-            # optional fused pool
-            pool = None
-            if li + 1 < len(layers) and layers[li + 1][0] == "pool":
-                pool = layers[li + 1][1]
-                p_hw = hw // pool
-                p_latch = jnp.zeros((cout, p_hw, p_hw), jnp.bool_)
-
-            out_frames = []
-            ops = jnp.zeros((), jnp.int32)
-            for t in range(T):
-                if aeq is not None:
-                    v, n = event_conv2d(v, w, aeq, fmt, t)
-                    ops = ops + n
-                else:  # analog first layer: dense current every step
-                    from .snn_layers import dense_conv_oracle
-
-                    v = v + dense_conv_oracle(analog, w)
-                    ops = ops + jnp.int32(analog.size * w.shape[-1] * K * K)
-                v = v + b
-                crossed = v > vth
-                if cfg.mode == "mttfs":
-                    # paper Sec. 4: spike at most once, no reset
-                    sp = crossed & ~latch
-                elif cfg.mode == "mttfs_cont":
-                    # Han & Roy [11]: continuous emission once crossed
-                    sp = crossed
-                elif cfg.mode == "if_reset":
-                    sp = crossed
-                    v = jnp.where(crossed, jnp.zeros_like(v), v)
-                else:
-                    raise ValueError(f"unknown neuron mode {cfg.mode}")
-                latch = latch | crossed
-                sp_chw = jnp.moveaxis(sp.astype(w.dtype), -1, 0)  # (C,H,W)
-                if pool is not None:
-                    sp_chw, p_latch = spike_maxpool(
-                        sp_chw, pool, p_latch,
-                        latch_once=(cfg.mode == "mttfs"),
-                    )
-                out_frames.append(sp_chw)
-
-            raster = jnp.stack(out_frames)       # (T, C_out, hw', hw')
-            analog = None
-            events_in.append(layer_events)
-            spikes_out.append(raster.sum().astype(jnp.int32))
-            add_ops.append(ops)
-            if aeq is None:
-                queue_words.append(jnp.zeros((), jnp.int32))
-
-            c = cout
-            if pool is not None:
-                hw = hw // pool
-                li += 1  # consume the fused pool token
-        elif ly[0] == "pool":
-            raise ValueError("unfused pool (pool must follow a conv)")
-        else:  # dense output layer: accumulate Vm over T, no thresholding
-            w, b = params[li]["w"], params[li]["b"]
-            v = jnp.zeros((w.shape[1],), w.dtype)
-            ops = jnp.zeros((), jnp.int32)
-            ev = jnp.zeros((), jnp.int32)
-            for t in range(T):
-                flat = jnp.moveaxis(raster[t], 0, -1).reshape(-1)  # HWC order
-                v, n = event_dense(v, w, flat)
-                ops = ops + n
-                ev = ev + (flat > 0).sum().astype(jnp.int32)
-            v = v + b * T
-            events_in.append(ev)
-            spikes_out.append(jnp.zeros((), jnp.int32))
-            add_ops.append(ops)
-            queue_words.append(jnp.zeros((), jnp.int32))
-            logits = v
-        li += 1
-
-    stats = SNNStats(
-        events_in=jnp.stack(events_in),
-        spikes_out=jnp.stack(spikes_out),
-        add_ops=jnp.stack(add_ops),
-        overflow=overflow,
-        queue_words=jnp.stack(queue_words),
-    )
-    return logits, stats
+    return infer(params, thresholds, cfg, image, backend="queue")
 
 
 def snn_infer_batch(params, thresholds, cfg: SNNConfig, images):
-    return jax.vmap(lambda im: snn_infer(params, thresholds, cfg, im))(images)
-
-
-# ---------------------------------------------------------------------------
-# Dense-dynamics reference path
-# ---------------------------------------------------------------------------
-#
-# Identical mathematics to snn_infer (tests assert logits match exactly):
-# event-driven accumulation of a spike raster == dense convolution of it.
-# Because the dynamics are identical, every queue statistic is *derivable*
-# from the dense rasters:
-#   events_in     = spike count of the producing layer,
-#   add_ops       = sum over spikes of (valid kernel offsets) * C_out,
-#   queue counts  = per-(t, c, phase) segment occupancy (phase split),
-#   overflow      = relu(occupancy - depth).
-# The dense path is ~100x faster on CPU and is what studies/benchmarks use;
-# the queue path (snn_infer + Pallas kernels) is the hardware model and is
-# validated against this one.
-
-def _valid_offsets_map(hw: int, K: int):
-    """(hw, hw) map: number of in-bounds kernel offsets per spike position."""
-    ones = jnp.ones((1, 1, hw, hw))
-    kern = jnp.ones((K, K, 1, 1))
-    return jax.lax.conv_general_dilated(
-        ones, kern, (1, 1), "SAME", dimension_numbers=("NCHW", "HWIO", "NHWC")
-    )[0, :, :, 0]
-
-
-def _segment_occupancy(fmt, raster_tchw):
-    """(T, C, H, W) raster -> (T, C, K2) per-segment event counts."""
-    from .aeq import _phase_split
-
-    T, C = raster_tchw.shape[:2]
-    occ = jax.vmap(jax.vmap(lambda m: (_phase_split(fmt, m) > 0).sum(-1)))(
-        raster_tchw
-    )
-    return occ  # (T, C, K2)
+    return infer_batch(params, thresholds, cfg, images, backend="queue")
 
 
 def snn_dense_infer(params, thresholds, cfg: SNNConfig, image: jnp.ndarray):
-    """Fast reference path: dense per-step convolutions, same dynamics.
+    """Fast reference path: dense per-step dynamics via ``jax.lax.scan``.
 
-    Returns (logits, SNNStats) — statistics exactly equal to the queue path's.
+    Returns (logits, SNNStats) — statistics exactly equal to the queue
+    path's whenever no queue overflows (asserted by the parity tests).
     """
-    from .snn_layers import dense_conv_oracle
-
-    layers = parse_spec(cfg.spec)
-    T = cfg.T
-    hw, c = cfg.input_hw, cfg.input_c
-
-    events_in, spikes_out, add_ops, queue_words = [], [], [], []
-    overflow = jnp.zeros((), jnp.int32)
-
-    chw = jnp.moveaxis(image, -1, 0)
-    if cfg.input_mode == "binary":
-        raster = encode_ttfs(chw, T, cfg.input_theta)
-        analog = None
-    else:
-        raster = None
-        analog = chw
-
-    li = 0
-    while li < len(layers):
-        ly = layers[li]
-        if ly[0] == "conv":
-            cout, K = ly[1], ly[2]
-            fmt = encoding.make_format(hw, K, compressed=cfg.compressed)
-            w, b = params[li]["w"], params[li]["b"]
-            vth = thresholds[li]
-            v = jnp.full((hw, hw, cout), cfg.v_init_frac * vth, w.dtype)
-            latch = jnp.zeros((hw, hw, cout), jnp.bool_)
-            vmap_off = _valid_offsets_map(hw, K)
-
-            pool = None
-            if li + 1 < len(layers) and layers[li + 1][0] == "pool":
-                pool = layers[li + 1][1]
-                p_hw = hw // pool
-                p_latch = jnp.zeros((cout, p_hw, p_hw), jnp.bool_)
-
-            ops = jnp.zeros((), jnp.float32)
-            ev = jnp.zeros((), jnp.int32)
-            out_frames = []
-            if raster is not None:
-                occ = _segment_occupancy(fmt, raster)
-                queue_words.append(occ.sum().astype(jnp.int32))
-                overflow = overflow + jnp.maximum(occ - cfg.depth, 0).sum()
-                ev = raster.sum().astype(jnp.int32)
-                ops = (raster * vmap_off[None, None]).sum() * cout
-            else:
-                queue_words.append(jnp.zeros((), jnp.int32))
-
-            for t in range(T):
-                if raster is not None:
-                    v = v + dense_conv_oracle(raster[t], w)
-                else:
-                    v = v + dense_conv_oracle(analog, w)
-                    ops = ops + jnp.float32(analog.size * cout * K * K)
-                v = v + b
-                crossed = v > vth
-                if cfg.mode == "mttfs":
-                    sp = crossed & ~latch
-                elif cfg.mode == "mttfs_cont":
-                    sp = crossed
-                elif cfg.mode == "if_reset":
-                    sp = crossed
-                    v = jnp.where(crossed, jnp.zeros_like(v), v)
-                else:
-                    raise ValueError(cfg.mode)
-                latch = latch | crossed
-                sp_chw = jnp.moveaxis(sp.astype(w.dtype), -1, 0)
-                if pool is not None:
-                    sp_chw, p_latch = spike_maxpool(
-                        sp_chw, pool, p_latch,
-                        latch_once=(cfg.mode == "mttfs"))
-                out_frames.append(sp_chw)
-
-            raster = jnp.stack(out_frames)
-            analog = None
-            events_in.append(ev)
-            spikes_out.append(raster.sum().astype(jnp.int32))
-            add_ops.append(ops.astype(jnp.int32))
-            c = cout
-            if pool is not None:
-                hw = hw // pool
-                li += 1
-        elif ly[0] == "pool":
-            raise ValueError("unfused pool (pool must follow a conv)")
-        else:
-            w, b = params[li]["w"], params[li]["b"]
-            flat = jnp.moveaxis(raster, 1, -1).reshape(T, -1)  # (T, HWC)
-            v = (flat @ w).sum(0) + b * T
-            ev = (flat > 0).sum().astype(jnp.int32)
-            events_in.append(ev)
-            spikes_out.append(jnp.zeros((), jnp.int32))
-            add_ops.append(ev * w.shape[1])
-            queue_words.append(jnp.zeros((), jnp.int32))
-            logits = v
-        li += 1
-
-    stats = SNNStats(
-        events_in=jnp.stack(events_in),
-        spikes_out=jnp.stack(spikes_out),
-        add_ops=jnp.stack(add_ops),
-        overflow=overflow,
-        queue_words=jnp.stack(queue_words),
-    )
-    return logits, stats
+    return infer(params, thresholds, cfg, image, backend="dense")
 
 
 def snn_dense_infer_batch(params, thresholds, cfg: SNNConfig, images):
-    return jax.vmap(lambda im: snn_dense_infer(params, thresholds, cfg, im))(images)
+    return infer_batch(params, thresholds, cfg, images, backend="dense")

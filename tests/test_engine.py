@@ -1,0 +1,253 @@
+"""The execution engine: plan compilation, spec validation, backend parity.
+
+The structural guarantee this file pins down: ``snn_infer`` (queue backend)
+and ``snn_dense_infer`` (scanned dense backend) are two backends of ONE
+engine, so logits agree to float tolerance and every SNNStats field agrees
+exactly — across all registered neuron modes and both input encodings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, neuron, snn_model
+from repro.core.engine import SpecError, compile_plan, parse_spec
+from repro.core.snn_model import SNNConfig
+
+
+SPEC = "6C3-P2-4C3-8"
+HW, C = 10, 1
+
+
+@pytest.fixture(scope="module")
+def net():
+    params = snn_model.init_params(jax.random.PRNGKey(7), SPEC, HW, C)
+    th = [jnp.asarray(0.5)] * len(parse_spec(SPEC))
+    img = jnp.asarray(
+        np.random.default_rng(11).random((HW, HW, C)), jnp.float32)
+    return params, th, img
+
+
+def _stats_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a.events_in),
+                                  np.asarray(b.events_in), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(a.spikes_out),
+                                  np.asarray(b.spikes_out), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(a.add_ops),
+                                  np.asarray(b.add_ops), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(a.queue_words),
+                                  np.asarray(b.queue_words), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(a.overflow),
+                                  np.asarray(b.overflow), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", neuron.MODES)
+@pytest.mark.parametrize("input_mode", ["analog", "binary"])
+def test_queue_and_dense_backends_agree(net, mode, input_mode):
+    """Identical logits and identical SNNStats, every mode x input encoding."""
+    params, th, img = net
+    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3, depth=64,
+                    mode=mode, input_mode=input_mode)
+    lq, sq = snn_model.snn_infer(params, th, cfg, img)
+    ld, sd = snn_model.snn_dense_infer(params, th, cfg, img)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(ld),
+                               atol=1e-4, rtol=1e-4)
+    _stats_equal(sq, sd, msg=f"{mode}/{input_mode}")
+    assert int(sq.overflow) == 0  # parity regime: nothing dropped
+
+
+def test_scan_equals_unrolled(net):
+    """lax.scan time loop == the seed's unrolled per-step loop."""
+    params, th, img = net
+    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=4, depth=64,
+                    mode="mttfs_cont")
+    ls, ss = engine.infer(params, th, cfg, img, backend="dense")
+    lu, su = engine.infer(params, th, cfg, img, backend="dense_unrolled")
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lu),
+                               atol=1e-5, rtol=1e-5)
+    _stats_equal(ss, su)
+
+
+def test_pallas_queue_backend_matches_dense(net):
+    """The kernels/event_accum Pallas path is a drop-in queue accumulator."""
+    spec = "4C3-6"
+    params = snn_model.init_params(jax.random.PRNGKey(3), spec, 6, 1)
+    th = [jnp.asarray(0.4)] * 2
+    img = jnp.asarray(np.random.default_rng(5).random((6, 6, 1)), jnp.float32)
+    cfg = SNNConfig(spec=spec, input_hw=6, input_c=1, T=2, depth=16,
+                    mode="mttfs_cont", input_mode="binary")
+    lp, sp = engine.infer(params, th, cfg, img, backend="queue_pallas")
+    ld, sd = engine.infer(params, th, cfg, img, backend="dense")
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                               atol=1e-4, rtol=1e-4)
+    _stats_equal(sp, sd)
+
+
+def test_batch_infer_matches_per_sample(net):
+    params, th, img = net
+    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3, depth=64)
+    imgs = jnp.stack([img, img * 0.5])
+    lb, sb = engine.infer_batch(params, th, cfg, imgs, backend="dense")
+    l0, s0 = engine.infer(params, th, cfg, imgs[1], backend="dense")
+    np.testing.assert_allclose(np.asarray(lb[1]), np.asarray(l0),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sb.spikes_out[1]),
+                                  np.asarray(s0.spikes_out))
+
+
+def test_runner_is_jit_cached(net):
+    params, th, img = net
+    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3, depth=64)
+    f1 = engine._runner(cfg, "dense", False)
+    f2 = engine._runner(cfg, "dense", False)
+    assert f1 is f2  # one compiled executable per (cfg, backend, batched)
+    assert engine._runner(cfg, "queue", False) is not f1
+
+
+# ---------------------------------------------------------------------------
+# Plan compilation
+# ---------------------------------------------------------------------------
+
+def test_compile_plan_geometry():
+    plan = compile_plan("32C3-32C3-P3-10C3-10", 28, 1)
+    assert plan.n_layers == 5
+    assert [cp.index for cp in plan.convs] == [0, 1, 3]
+    assert plan.convs[1].pool == 3 and plan.convs[1].out_hw == 9
+    assert plan.convs[2].in_hw == 9 and plan.convs[2].in_c == 32
+    assert plan.out.n_in == 9 * 9 * 10 and plan.out.n_out == 10
+    # cached: same args -> same object
+    assert compile_plan("32C3-32C3-P3-10C3-10", 28, 1) is plan
+
+
+def test_plan_shared_with_cnn_and_conversion():
+    """CNN forward, conversion, and the SNN walk one LayerPlan."""
+    from repro.core import cnn_baseline, conversion
+
+    spec = "4C3-P2-6"
+    params = snn_model.init_params(jax.random.PRNGKey(0), spec, 8, 1)
+    imgs = jnp.asarray(np.random.default_rng(0).random((4, 8, 8, 1)),
+                       jnp.float32)
+    logits = cnn_baseline.cnn_forward(params, spec, imgs)
+    assert logits.shape == (4, 6)
+    snn_params, th = conversion.convert(params, spec, imgs)
+    assert len(snn_params) == len(params) == 3
+    assert snn_params[1] == {}  # pool slot stays empty
+
+
+# ---------------------------------------------------------------------------
+# Spec validation (clear errors instead of deep-inference ValueErrors)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad, fragment", [
+    ("", "empty"),
+    ("-32C3-10", "leading"),
+    ("32C3-10-", "trailing"),
+    ("32C3--10", "doubled"),
+    ("P2-32C3-10", "before any conv"),
+    ("32C3-P2-P2-10", "directly follow"),
+    ("32C-10", "malformed"),
+    ("32c3-10", "malformed"),
+    ("C3-10", "malformed"),
+    ("32C3-x-10", "malformed"),
+    ("0C3-10", ">= 1"),
+    ("32C4-10", "even kernel"),
+    ("10-32C3-10", "after the dense output"),
+])
+def test_parse_spec_rejects(bad, fragment):
+    with pytest.raises(SpecError) as e:
+        parse_spec(bad)
+    assert fragment in str(e.value)
+
+
+def test_parse_spec_accepts_paper_specs():
+    from repro.configs import PAPER_SPECS
+
+    for meta in PAPER_SPECS.values():
+        layers = parse_spec(meta["spec"])
+        assert layers[-1][0] == "dense"
+
+
+@pytest.mark.parametrize("bad, hw, fragment", [
+    ("32C3", 28, "end with a dense"),
+    ("32C3-P2-32C3", 28, "end with a dense"),
+    ("2C5-4", 3, "kernel 5 exceeds"),
+    ("2C3-P9-4", 6, "pool window 9 exceeds"),
+])
+def test_compile_plan_rejects(bad, hw, fragment):
+    with pytest.raises(SpecError) as e:
+        compile_plan(bad, hw, 1)
+    assert fragment in str(e.value)
+
+
+def test_execute_rejects_mismatched_params(net):
+    params, th, img = net
+    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2, depth=64)
+    with pytest.raises(ValueError, match="layers"):
+        engine.infer(params[:-1], th, cfg, img, backend="dense")
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+def test_unknown_neuron_mode_lists_registered(net):
+    params, th, img = net
+    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2, depth=64,
+                    mode="nope")
+    with pytest.raises(ValueError, match="mttfs"):
+        snn_model.snn_dense_infer(params, th, cfg, img)
+
+
+def test_unknown_backend_lists_registered():
+    with pytest.raises(ValueError, match="dense"):
+        engine.get_backend("nope")
+
+
+def test_custom_neuron_mode_runs_through_both_backends(net):
+    """Adding a neuron model is a one-file change: register and run."""
+    params, th, img = net
+
+    def fire_never(v, latch, vth):
+        crossed = v > jnp.asarray(vth, v.dtype)
+        return v, jnp.zeros_like(crossed), latch | crossed
+
+    try:
+        neuron.register_neuron_model("test_silent", fire_never)
+        cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2, depth=64,
+                        mode="test_silent")
+        for backend in ("dense", "queue"):
+            logits, stats = engine.infer(params, th, cfg, img,
+                                         backend=backend)
+            assert int(stats.spikes_out.sum()) == 0
+        with pytest.raises(ValueError, match="already registered"):
+            neuron.register_neuron_model("test_silent", fire_never)
+
+        # overwrite must invalidate the compiled-runner cache: the same cfg
+        # must execute the NEW dynamics, not a stale jitted executable
+        def fire_always(v, latch, vth):
+            crossed = v > jnp.asarray(vth, v.dtype)
+            return v, jnp.ones_like(crossed), latch | crossed
+
+        neuron.register_neuron_model("test_silent", fire_always,
+                                     overwrite=True)
+        _, stats = engine.infer(params, th, cfg, img, backend="dense")
+        assert int(stats.spikes_out.sum()) > 0
+    finally:
+        neuron.unregister_neuron_model("test_silent")
+    with pytest.raises(ValueError, match="unknown neuron mode"):
+        engine.infer(params, th, cfg, img, backend="dense")
+
+
+def test_static_costs_from_plan():
+    from repro.core.energy import snn_static_costs
+
+    plan = compile_plan("32C3-32C3-P3-10C3-10", 28, 1)
+    costs = snn_static_costs(plan, T=4, depth=64, word_bytes=1)
+    assert len(costs.queue_bytes) == 3
+    assert costs.queue_bytes[0] == 4 * 1 * 9 * 64 * 1
+    assert costs.state_bytes[0] == 28 * 28 * 32 * 4
+    assert costs.total_queue_bytes == sum(costs.queue_bytes)

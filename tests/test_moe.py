@@ -3,7 +3,7 @@ capacity queue; packed routing words == compressed AE encoding)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.models.moe import (INVALID_WORD, RANK_BITS, MoEConfig, capacity,
                               moe_apply, moe_init, route)
