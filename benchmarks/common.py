@@ -1,15 +1,43 @@
-"""Shared benchmark utilities: CNN training cache + timing."""
+"""Shared benchmark utilities: the study cache + timing + CSV emission.
+
+All suites share ONE :class:`repro.study.StudyCache` rooted at
+``benchmarks/_cache``: train/convert artifacts persist across processes as
+content-hash-named pickles (a spec/epoch/bit-width change can never alias a
+stale file — the fix for the old name-keyed train cache), and collect
+artifacts stay in memory so suites that study the same point (e.g. fig7 and
+fig9/12) run SNN inference once between them.
+
+Legacy ``{dataset}_cnn.pkl`` files from the name-keyed era are ignored: the
+loader only looks for ``train_{dataset}_{hash}.pkl`` names.
+"""
 from __future__ import annotations
 
 import os
-import pickle
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+
+_STUDY_CACHE = None
+
+
+def study_cache():
+    """The process-wide benchmark StudyCache (disk-backed under _cache/)."""
+    global _STUDY_CACHE
+    if _STUDY_CACHE is None:
+        from repro.study import StudyCache
+
+        _STUDY_CACHE = StudyCache(dir=CACHE)
+    return _STUDY_CACHE
+
+
+def run_study_point(spec):
+    """``repro.study.run`` against the shared benchmark cache."""
+    from repro.study import run
+
+    return run(spec, cache=study_cache())
 
 
 def timed(fn, *args, repeats: int = 3, warmup: int = 1):
@@ -28,38 +56,12 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1):
 
 def trained_cnn(dataset: str, *, epochs: int = 6, n_train: int = 2048,
                 lr: float = 2e-3):
-    """Train (or load the cached) paper-spec CNN for a dataset."""
-    from repro.configs import PAPER_SPECS
-    from repro.core import cnn_baseline, snn_model
-    from repro.data.synthetic import DATASETS
+    """Train (or load the content-hash-cached) paper-spec CNN for a dataset."""
+    from repro.study import StudySpec, train
 
-    os.makedirs(CACHE, exist_ok=True)
-    path = os.path.join(CACHE, f"{dataset}_cnn.pkl")
-    spec = PAPER_SPECS[dataset]["spec"]
-    imgs, labels = DATASETS[dataset](n_train, seed=1)
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            params = [
-                {k: jnp.asarray(v) for k, v in layer.items()}
-                for layer in pickle.load(f)]
-        return spec, params, imgs
-
-    hw, c = imgs.shape[1], imgs.shape[-1]
-    params = snn_model.init_params(jax.random.PRNGKey(0), spec, hw, c)
-    init_opt, step = cnn_baseline.make_train_step(spec, weight_bits=8,
-                                                  act_bits=8, lr=lr)
-    opt = init_opt(params)
-    for epoch in range(epochs):
-        perm = np.random.default_rng(epoch).permutation(len(imgs))
-        for i in range(0, len(imgs), 128):
-            idx = perm[i : i + 128]
-            params, opt, _ = step(params, opt, {
-                "image": jnp.asarray(imgs[idx]),
-                "label": jnp.asarray(labels[idx])})
-    with open(path, "wb") as f:
-        pickle.dump([{k: np.asarray(v) for k, v in layer.items()}
-                     for layer in params], f)
-    return spec, params, imgs
+    spec = StudySpec(dataset=dataset, epochs=epochs, n_train=n_train, lr=lr)
+    art = train(spec, cache=study_cache())
+    return spec.net, art.params, art.train_images
 
 
 # every emit() lands here too, so run.py --json can write a perf snapshot
@@ -70,3 +72,25 @@ def emit(name: str, us_per_call: float, derived: str):
     RESULTS.append(
         {"name": name, "us_per_call": float(us_per_call), "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_report(name: str, report, extra: str = ""):
+    """Emit a study :class:`~repro.study.Report` as a derived-metrics row.
+
+    Flattens ``report.to_json()`` scalars (accuracy, static CNN costs,
+    energy/latency/FPS-per-W medians) into the CSV/JSON snapshot format.
+    """
+    j = report.to_json()
+    parts = [
+        f"cnn_acc={j['cnn_acc']:.3f}",
+        f"snn_acc={j['snn_acc']:.3f}",
+        f"agreement={j['agreement']:.3f}",
+        f"snn_energy_J_med={j['snn_energy_j_deciles'][3]:.3g}",
+        f"cnn_energy_J={j['cnn_energy_j']:.3g}",
+        f"snn_fpsw_med={j['snn_fps_per_w_deciles'][3]:.0f}",
+        f"cnn_fpsw={j['cnn_fps_per_w']:.0f}",
+        f"overflow={j['overflow']}",
+    ]
+    if extra:
+        parts.append(extra)
+    emit(name, 0.0, ";".join(parts))

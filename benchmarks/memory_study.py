@@ -10,32 +10,36 @@ Also reports the paper's own #BRAM model on the same sweep for comparison.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fpga_model
 from repro.core.energy import E_HBM_BYTE, E_VMEM_BYTE
 from repro.core.snn_model import SNNStats
-from repro.core.energy import snn_energy
+from repro.study import price_stats
 
 from .common import emit
 
 
 def fig11_residency_sweep():
-    """Energy vs word width w for HBM- vs VMEM-resident queues (Fig. 11)."""
+    """Energy vs word width w for HBM- vs VMEM-resident queues (Fig. 11).
+
+    Exercises the study pipeline's repricing entry point on a hand-built
+    stats record (numpy in, priced like a live inference): one record, six
+    pricing variants, no inference anywhere.
+    """
     n_events = 20_000
     stats = SNNStats(
-        events_in=jnp.asarray([[n_events]]),
-        spikes_out=jnp.asarray([[n_events // 3]]),
-        add_ops=jnp.asarray([[n_events * 9 * 32]]),
-        overflow=jnp.zeros((), jnp.int32),
-        queue_words=jnp.asarray([[n_events]]),
+        events_in=np.asarray([[n_events]]),
+        spikes_out=np.asarray([[n_events // 3]]),
+        add_ops=np.asarray([[n_events * 9 * 32]]),
+        overflow=np.zeros((), np.int32),
+        queue_words=np.asarray([[n_events]]),
     )
     for wb in (1, 2, 4):
-        e_hbm = float(snn_energy(stats, word_bytes=wb,
-                                 vmem_resident=False).total_pj[0])
-        e_vmem = float(snn_energy(stats, word_bytes=wb,
-                                  vmem_resident=True).total_pj[0])
+        e_hbm = float(price_stats(stats, word_bytes=wb,
+                                  vmem_resident=False).total_pj[0])
+        e_vmem = float(price_stats(stats, word_bytes=wb,
+                                   vmem_resident=True).total_pj[0])
         emit(f"fig11/word_{wb}B", 0.0,
              f"hbm_pJ={e_hbm:.4g};vmem_pJ={e_vmem:.4g};"
              f"ratio={e_hbm / e_vmem:.2f}")

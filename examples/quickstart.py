@@ -1,54 +1,50 @@
-"""Quickstart: the paper's end-to-end flow in one script.
+"""Quickstart: the paper's end-to-end flow through the staged Study API.
 
-1. Train the paper's MNIST CNN (Table 6: 32C3-32C3-P3-10C3-10, 20,568 params)
-   with FINN-style 8-bit quantization on the procedural digits dataset.
-2. Convert it to an m-TTFS SNN (snntoolbox data-based normalization +
-   threshold balancing), T=4 algorithmic time steps.
-3. Run the SNN-vs-CNN comparison: per-sample energy/latency distributions vs
-   the CNN's static cost (the paper's Figs. 7-9 methodology).
+1. Declare the study point as a :class:`repro.study.StudySpec` (the paper's
+   MNIST CNN, Table 6: 32C3-32C3-P3-10C3-10, 20,568 params; FINN-style 8-bit
+   quantized training; m-TTFS conversion with threshold balancing; T=4).
+2. ``study.run`` walks the cached stages: train → convert → collect → price.
+3. The report holds per-sample energy/latency distributions vs the CNN's
+   static cost (the paper's Figs. 7-9 methodology).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--quick]
+
+``--quick`` (the CI smoke mode) keeps the full training recipe — the
+accuracy claims must still hold — and trims only the eval set and the
+threshold-balancing pass.
 """
+import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import cnn_baseline, snn_model
-from repro.core.comparison import run_study
-from repro.data.synthetic import make_digits
+from repro import study
+from repro.core.snn_model import count_params
+from repro.study import StudySpec
 
 
 def main():
-    spec = "32C3-32C3-P3-10C3-10"
-    print(f"model: {spec}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller eval set, no threshold "
+                         "balancing (training stays full)")
+    args = ap.parse_args()
 
-    train_imgs, train_labels = make_digits(2048, seed=1)
-    test_imgs, test_labels = make_digits(256, seed=99)
+    spec = StudySpec(
+        dataset="mnist",
+        n_eval=64 if args.quick else 256,
+        T=4, depth=64, mode="mttfs_cont", input_mode="analog",
+        balance=not args.quick,
+    )
+    print(f"model: {spec.net}")
 
-    params = snn_model.init_params(jax.random.PRNGKey(0), spec, 28, 1)
-    print(f"params: {snn_model.count_params(params):,} (paper: 20,568)")
-
-    init_opt, step = cnn_baseline.make_train_step(
-        spec, weight_bits=8, act_bits=8, lr=2e-3)
-    opt = init_opt(params)
     t0 = time.time()
-    for epoch in range(6):
-        perm = np.random.default_rng(epoch).permutation(len(train_imgs))
-        for i in range(0, len(train_imgs), 128):
-            idx = perm[i : i + 128]
-            batch = {"image": jnp.asarray(train_imgs[idx]),
-                     "label": jnp.asarray(train_labels[idx])}
-            params, opt, loss = step(params, opt, batch)
-    print(f"CNN trained in {time.time() - t0:.0f}s, final loss "
-          f"{float(loss):.4f}")
+    trained = study.train(spec)
+    print(f"params: {count_params(trained.params):,} (paper: 20,568); "
+          f"CNN trained in {time.time() - t0:.0f}s")
 
-    res = run_study(
-        params, spec, "mnist",
-        jnp.asarray(test_imgs), jnp.asarray(test_labels),
-        jnp.asarray(train_imgs[:256]),
-        T=4, depth=64, input_mode="analog", mode="mttfs_cont", balance=True)
+    t0 = time.time()
+    res = study.run(spec)   # train is a cache hit; convert → collect → price
+    print(f"convert+collect+price in {time.time() - t0:.0f}s "
+          f"(stage executions: {dict(study.stage_counts)})")
 
     print("\n=== SNN vs CNN (paper Sec. 4 methodology) ===")
     for k, v in res.summary_rows():

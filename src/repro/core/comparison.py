@@ -1,61 +1,25 @@
-"""Matched-budget SNN-vs-CNN study harness (the paper's Sec. 4/5 experiments).
+"""DEPRECATED flat entry point for the SNN-vs-CNN study.
 
-Reproduces the paper's methodology:
-  1. train a CNN on the dataset (quantized, FINN-style),
-  2. convert it to an m-TTFS SNN (snntoolbox algorithm),
-  3. run N samples through both, collecting *per-sample* SNN cost
-     distributions vs. the CNN's static cost,
-  4. report full ranges/histograms (never just averages — the paper's
-     explicit methodological point).
+The experiment now lives in the staged, cached Study API
+(:mod:`repro.study`; see ``docs/STUDY_API.md``):
+
+    spec → train → convert → collect → price → report
+
+:func:`run_study` survives as a thin shim: it builds a
+:class:`~repro.study.StudySpec` from its flat kwargs and delegates to
+:func:`repro.study.run_with_data`, returning numerically identical results
+(the golden tests in ``tests/test_study.py`` pin this against a frozen copy
+of the old monolith). ``StudyResult`` is now an alias of
+:class:`repro.study.Report`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from . import conversion, encoding, engine
-from .cnn_baseline import cnn_costs, cnn_forward
-from .energy import EnergyBreakdown, cnn_energy, snn_energy
-from .snn_model import SNNConfig
-
-
-@dataclass
-class StudyResult:
-    dataset: str
-    cnn_acc: float
-    snn_acc: float
-    agreement: float                 # fraction of samples where argmax matches
-    snn_energy_j: np.ndarray         # per-sample
-    cnn_energy_j: float
-    snn_latency_s: np.ndarray
-    cnn_latency_s: float
-    snn_fps_per_w: np.ndarray
-    cnn_fps_per_w: float
-    spikes_per_sample: np.ndarray
-    events_per_sample: np.ndarray
-    overflow: int
-    per_class_spikes: dict = field(default_factory=dict)
-
-    def summary_rows(self):
-        def rng(a):
-            return f"[{np.min(a):.3g}; {np.max(a):.3g}]"
-
-        return [
-            ("cnn_acc", f"{self.cnn_acc:.4f}"),
-            ("snn_acc", f"{self.snn_acc:.4f}"),
-            ("conversion_gap_pp", f"{(self.cnn_acc - self.snn_acc) * 100:.2f}"),
-            ("agreement", f"{self.agreement:.4f}"),
-            ("snn_energy_J", rng(self.snn_energy_j)),
-            ("cnn_energy_J", f"{self.cnn_energy_j:.3g}"),
-            ("snn_latency_s", rng(self.snn_latency_s)),
-            ("cnn_latency_s", f"{self.cnn_latency_s:.3g}"),
-            ("snn_FPS_per_W", rng(self.snn_fps_per_w)),
-            ("cnn_FPS_per_W", f"{self.cnn_fps_per_w:.4g}"),
-            ("overflow_events", str(self.overflow)),
-        ]
+from ..study import StudySpec, run_with_data
+from ..study.report import Report as StudyResult  # noqa: F401  (compat)
 
 
 def run_study(
@@ -78,76 +42,36 @@ def run_study(
     vmem_resident: bool = True,
     batch: int = 64,
 ) -> StudyResult:
-    H = images.shape[1]
-    C = images.shape[-1]
-    cfg = SNNConfig(
-        spec=spec, input_hw=H, input_c=C, T=T, depth=depth,
-        compressed=compressed, input_mode=input_mode, mode=mode,
-    )
-    snn_params, thresholds = conversion.convert(params, spec, calib_images)
-    if balance:
-        thresholds = conversion.balance_thresholds(
-            snn_params, thresholds, cfg, params, calib_images[:128]
-        )
+    """Deprecated: prefer ``repro.study.run(StudySpec(...))`` / ``sweep``.
 
-    # --- CNN side (static) ---
-    logits_cnn = cnn_forward(params, spec, images, weight_bits=weight_bits,
-                             act_bits=weight_bits)
-    cnn_pred = jnp.argmax(logits_cnn, -1)
-    cnn_acc = float((cnn_pred == labels).mean())
-    costs = cnn_costs(params, spec, H, C, weight_bits, weight_bits)
-    e_cnn = cnn_energy(costs, bits=weight_bits)
+    ``dataset_name`` must be a registered dataset name (it labels the
+    report and validates the spec); the data itself comes from the
+    ``images`` / ``labels`` / ``calib_images`` arrays, exactly as before.
+    """
+    warnings.warn(
+        "comparison.run_study is deprecated; use the staged Study API "
+        "(repro.study.run / sweep) — it caches train/convert/collect and "
+        "re-prices recorded stats instead of re-running inference",
+        DeprecationWarning, stacklevel=2)
+    if use_queues:
+        warnings.warn(
+            "use_queues is deprecated; pass backend='queue' instead",
+            DeprecationWarning, stacklevel=2)
+        if backend is None:
+            backend = "queue"
 
-    # --- SNN side (per-sample distributions) ---
-    # any registered engine backend works here; `use_queues` is the legacy
-    # boolean spelling of backend="queue"
-    backend = backend or ("queue" if use_queues else "dense")
-    infer = lambda ims: engine.infer_batch(  # noqa: E731 — jit-cached in engine
-        snn_params, thresholds, cfg, ims, backend=backend)
-    preds, energies, latencies, spikes, events, overflow = [], [], [], [], [], 0
-    fmt = encoding.make_format(H, 3, compressed=compressed)
-    wb = encoding.word_nbytes(fmt)
-    for i in range(0, images.shape[0], batch):
-        logits, stats = infer(images[i : i + batch])
-        preds.append(np.asarray(jnp.argmax(logits, -1)))
-        e = snn_energy(stats, word_bytes=wb, vmem_resident=vmem_resident)
-        energies.append(np.asarray(e.total_j))
-        latencies.append(np.asarray(e.latency_s))
-        spikes.append(np.asarray(stats.spikes_out.sum(-1)))
-        events.append(np.asarray(stats.events_in.sum(-1)))
-        overflow += int(stats.overflow.sum())
-
-    snn_pred = np.concatenate(preds)
-    labels_np = np.asarray(labels)
-    snn_energy_j = np.concatenate(energies)
-    snn_latency_s = np.concatenate(latencies)
-    spikes_np = np.concatenate(spikes)
-
-    per_class = {
-        int(k): float(spikes_np[labels_np == k].mean())
-        for k in np.unique(labels_np)
-    }
-
-    snn_power = snn_energy_j / snn_latency_s
-    from .energy import STATIC_POWER_W
-
-    snn_fpw = 1.0 / (snn_latency_s * (snn_power + STATIC_POWER_W))
-    cnn_power = float(e_cnn.total_j / e_cnn.latency_s)
-    cnn_fpw = 1.0 / (float(e_cnn.latency_s) * (cnn_power + STATIC_POWER_W))
-
-    return StudyResult(
+    images = jnp.asarray(images)
+    labels = jnp.asarray(labels)
+    calib_images = jnp.asarray(calib_images)
+    study_spec = StudySpec(
         dataset=dataset_name,
-        cnn_acc=cnn_acc,
-        snn_acc=float((snn_pred == labels_np).mean()),
-        agreement=float((snn_pred == np.asarray(cnn_pred)).mean()),
-        snn_energy_j=snn_energy_j,
-        cnn_energy_j=float(e_cnn.total_j),
-        snn_latency_s=snn_latency_s,
-        cnn_latency_s=float(e_cnn.latency_s),
-        snn_fps_per_w=snn_fpw,
-        cnn_fps_per_w=cnn_fpw,
-        spikes_per_sample=spikes_np,
-        events_per_sample=np.concatenate(events),
-        overflow=overflow,
-        per_class_spikes=per_class,
+        net=spec,
+        input_hw=int(images.shape[1]),
+        input_c=int(images.shape[-1]),
+        n_eval=int(images.shape[0]),
+        n_calib=int(calib_images.shape[0]),
+        T=T, depth=depth, compressed=compressed, input_mode=input_mode,
+        mode=mode, balance=balance, backend=backend or "dense",
+        weight_bits=weight_bits, vmem_resident=vmem_resident, batch=batch,
     )
+    return run_with_data(study_spec, params, images, labels, calib_images)

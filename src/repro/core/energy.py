@@ -95,6 +95,38 @@ def snn_energy(
     return EnergyBreakdown(compute, hbm, vmem, compute + hbm + vmem, latency)
 
 
+def reprice(
+    stats,
+    *,
+    word_bytes: int = 1,
+    mem_bytes: int = 4,
+    vmem_resident: bool = True,
+    events_per_cycle: int = 9,
+    lanes: int = 128,
+) -> EnergyBreakdown:
+    """Price *recorded* stats — the study pipeline's repricing entry point.
+
+    Accepts a live :class:`~repro.core.snn_model.SNNStats`, the study
+    package's :class:`~repro.study.artifacts.StatsRecord` (anything with an
+    ``as_snn_stats()``), or a stats tuple holding plain numpy arrays, and
+    prices it identically to pricing a fresh inference: all inputs to
+    :func:`snn_energy` are integer counts, so repricing is exact. This is
+    what lets encoding / residency / bit-width sweeps run SNN inference
+    once and re-derive every energy number from the record.
+    """
+    rehydrate = getattr(stats, "as_snn_stats", None)
+    if rehydrate is not None:
+        stats = rehydrate()
+    else:
+        stats = stats._replace(
+            **{f: jnp.asarray(getattr(stats, f))
+               for f in ("events_in", "spikes_out", "add_ops", "overflow",
+                         "queue_words")})
+    return snn_energy(stats, word_bytes=word_bytes, mem_bytes=mem_bytes,
+                      vmem_resident=vmem_resident,
+                      events_per_cycle=events_per_cycle, lanes=lanes)
+
+
 class SNNStaticCosts(NamedTuple):
     """Input-independent SNN memory footprint, derived from the LayerPlan.
 

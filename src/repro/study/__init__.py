@@ -1,0 +1,31 @@
+"""The staged, cached Study API — the paper's experiment as a pipeline.
+
+    spec → train → convert → collect → price → report
+
+One :class:`StudySpec` declares a study point; :func:`run` executes the
+chain; :func:`sweep` prices variants against shared recorded stats. See
+``docs/STUDY_API.md`` for the stage diagram and how the paper's tables map
+onto sweeps. ``comparison.run_study`` survives as a deprecation shim over
+:func:`run_with_data`.
+"""
+from ..core.energy import reprice as price_stats  # noqa: F401
+from .artifacts import (CollectArtifact, ConvertArtifact,  # noqa: F401
+                        StatsRecord, TrainArtifact)
+from .cache import DEFAULT_CACHE, StudyCache, content_key  # noqa: F401
+from .report import Report, sweep_rows  # noqa: F401
+from .spec import (StudySpec, StudySpecError, UnknownBackendError,  # noqa: F401
+                   UnknownDatasetError, UnknownInputModeError,
+                   UnknownNeuronModeError)
+from .stages import (collect, convert, fit_cnn, from_params,  # noqa: F401
+                     price, reset_stage_counts, run, run_with_data,
+                     stage_counts, sweep, train)
+
+__all__ = [
+    "StudySpec", "StudySpecError", "UnknownDatasetError",
+    "UnknownBackendError", "UnknownNeuronModeError", "UnknownInputModeError",
+    "StudyCache", "DEFAULT_CACHE", "content_key",
+    "TrainArtifact", "ConvertArtifact", "CollectArtifact", "StatsRecord",
+    "Report", "sweep_rows", "price_stats",
+    "train", "convert", "collect", "price", "run", "run_with_data", "sweep",
+    "fit_cnn", "from_params", "stage_counts", "reset_stage_counts",
+]

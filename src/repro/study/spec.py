@@ -1,0 +1,198 @@
+"""StudySpec — the frozen, validated description of one study point.
+
+A :class:`StudySpec` captures *everything* that determines a matched-budget
+SNN-vs-CNN comparison (the paper's Sec. 4/5 methodology): dataset, network
+spec, training recipe, conversion options, execution (T/depth/mode/backend)
+and pricing options (compressed encoding, memory residency, bit widths).
+It is hashable and cheap to ``dataclasses.replace``, which is how sweeps are
+written: one base spec, N pricing variants, and the staged pipeline
+(`repro.study.stages`) re-prices recorded stats instead of re-running
+inference for variants that only differ in pricing fields.
+
+Field groups and the stage whose cache key they feed:
+
+======================  =====================================================
+stage                   fields
+======================  =====================================================
+train                   dataset, net, input_hw/c, n_train, train_seed,
+                        epochs, train_batch, lr, train_weight_bits,
+                        train_act_bits, init_seed
+convert                 percentile, n_calib, balance (+ T, mode, input_mode,
+                        input_theta, v_init_frac when balance=True)
+collect                 T, depth, mode, input_mode, input_theta, v_init_frac,
+                        backend, batch, n_eval, eval_seed
+price (never cached)    compressed, vmem_resident, weight_bits
+======================  =====================================================
+
+``compressed`` deliberately does *not* key the collect stage: the AE word
+format only changes how many bits a stored event occupies (Sec. 5.2), never
+which events exist or what the membrane dynamics compute, so the recorded
+per-sample stats are bit-identical across compressed on/off. The repricing
+golden test in ``tests/test_study.py`` pins this invariant against the
+frozen pre-refactor monolith.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+class StudySpecError(ValueError):
+    """A structurally invalid StudySpec (mirrors ``engine.SpecError``)."""
+
+
+class UnknownDatasetError(StudySpecError):
+    pass
+
+
+class UnknownBackendError(StudySpecError):
+    pass
+
+
+class UnknownNeuronModeError(StudySpecError):
+    pass
+
+
+class UnknownInputModeError(StudySpecError):
+    pass
+
+
+@dataclass(frozen=True)
+class StudySpec:
+    # --- what is being studied -------------------------------------------
+    dataset: str                      # key into repro.data.synthetic.DATASETS
+    net: str | None = None            # model spec string; None -> PAPER_SPECS
+    input_hw: int | None = None       # None -> PAPER_SPECS[dataset]
+    input_c: int | None = None
+
+    # --- data sizes ------------------------------------------------------
+    n_train: int = 2048
+    n_eval: int = 256
+    n_calib: int = 256                # conversion calibration samples
+    train_seed: int = 1
+    eval_seed: int = 99
+
+    # --- train stage -----------------------------------------------------
+    epochs: int = 6
+    train_batch: int = 128
+    lr: float = 2e-3
+    train_weight_bits: int = 8        # FINN-style fake-quant during training
+    train_act_bits: int = 8
+    init_seed: int = 0
+
+    # --- convert stage ---------------------------------------------------
+    percentile: float = 99.0          # data-based normalization percentile
+    balance: bool = True              # greedy threshold balancing
+    n_balance: int = 128              # calibration samples used by balancing
+
+    # --- collect stage (SNN execution) -----------------------------------
+    T: int = 4
+    depth: int = 256                  # AEQ depth per (t, c, phase) segment
+    mode: str = "mttfs_cont"          # neuron model (core/neuron.py registry)
+    input_mode: str = "analog"
+    input_theta: float = 0.1
+    v_init_frac: float = 0.5
+    backend: str = "dense"            # engine backend name
+    batch: int = 64                   # inference batch size
+
+    # --- price stage (re-priceable without re-running inference) ---------
+    compressed: bool = True           # compressed AE word encoding (Sec. 5.2)
+    vmem_resident: bool = True        # LUTRAM-analogue vs HBM (BRAM-analogue)
+    weight_bits: int = 8              # deployed CNN bit width
+
+    def __post_init__(self):
+        from ..core import engine, neuron
+
+        if not isinstance(self.dataset, str) or not self.dataset:
+            raise UnknownDatasetError(
+                f"dataset must be a non-empty string, got {self.dataset!r}")
+
+        # resolve net/geometry defaults from the paper's model zoo. A spec
+        # with explicit net + geometry tolerates a free-form dataset label
+        # (the run_study shim labels caller-provided data); the name is
+        # validated against the registry the moment it must *resolve*
+        # anything — here, or in load_train/load_eval.
+        if self.net is None or self.input_hw is None or self.input_c is None:
+            from ..configs import PAPER_SPECS
+
+            self._check_registered()
+            meta = PAPER_SPECS.get(self.dataset)
+            if meta is None:
+                raise UnknownDatasetError(
+                    f"dataset {self.dataset!r} has no paper-zoo defaults; "
+                    "pass net, input_hw, and input_c explicitly")
+            if self.net is None:
+                object.__setattr__(self, "net", meta["spec"])
+            if self.input_hw is None:
+                object.__setattr__(self, "input_hw", meta["hw"])
+            if self.input_c is None:
+                object.__setattr__(self, "input_c", meta["c"])
+
+        # net spec: compile_plan validates grammar + geometry (SpecError)
+        engine.compile_plan(self.net, self.input_hw, self.input_c,
+                            self.compressed)
+
+        if self.backend not in engine.available_backends():
+            raise UnknownBackendError(
+                f"unknown backend {self.backend!r}; registered backends: "
+                f"{sorted(engine.available_backends())}")
+        try:
+            neuron.get_neuron_model(self.mode)
+        except ValueError as e:
+            raise UnknownNeuronModeError(str(e)) from None
+        if self.input_mode not in ("analog", "binary"):
+            raise UnknownInputModeError(
+                f"unknown input_mode {self.input_mode!r} "
+                "(expected 'analog' or 'binary')")
+
+        for name in ("n_train", "n_eval", "n_calib", "epochs", "train_batch",
+                     "T", "depth", "batch", "n_balance"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise StudySpecError(
+                    f"{name} must be a positive integer, got {v!r}")
+        if self.weight_bits < 1 or self.train_weight_bits < 1:
+            raise StudySpecError("bit widths must be >= 1")
+
+    # -- convenience ------------------------------------------------------
+
+    def replace(self, **changes) -> "StudySpec":
+        """`dataclasses.replace` spelled as a method (sweep ergonomics)."""
+        return dataclasses.replace(self, **changes)
+
+    def snn_config(self):
+        """The engine :class:`SNNConfig` this spec executes under."""
+        from ..core.snn_model import SNNConfig
+
+        return SNNConfig(
+            spec=self.net, input_hw=self.input_hw, input_c=self.input_c,
+            T=self.T, mode=self.mode, depth=self.depth,
+            compressed=self.compressed, input_mode=self.input_mode,
+            input_theta=self.input_theta, v_init_frac=self.v_init_frac)
+
+    def _check_registered(self):
+        from ..data.synthetic import DATASETS
+
+        if self.dataset not in DATASETS:
+            raise UnknownDatasetError(
+                f"unknown dataset {self.dataset!r}; registered datasets: "
+                f"{sorted(DATASETS)}")
+
+    def load_train(self):
+        """(images, labels) for the train split — procedural, reproducible."""
+        from ..data.synthetic import DATASETS
+
+        self._check_registered()
+        return DATASETS[self.dataset](self.n_train, seed=self.train_seed)
+
+    def load_eval(self):
+        from ..data.synthetic import DATASETS
+
+        self._check_registered()
+        return DATASETS[self.dataset](self.n_eval, seed=self.eval_seed)
+
+    def pricing_label(self) -> str:
+        """Human-readable tag for the price-stage fields (sweep tables)."""
+        enc = "compressed" if self.compressed else "uncompressed"
+        res = "VMEM" if self.vmem_resident else "HBM"
+        return f"{enc}+{res}+w{self.weight_bits}"

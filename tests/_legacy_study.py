@@ -1,0 +1,128 @@
+"""FROZEN copy of the pre-refactor ``comparison.run_study`` monolith.
+
+This is the golden reference for the staged Study API: the shim and the
+staged pipeline must reproduce this function's outputs *exactly* (every
+array bit-identical) for any argument combination. Do not modernize it —
+its value is that it never changes. (Same pattern as
+``benchmarks/_seed_reference.py`` for the engine.)
+"""
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conversion, encoding, engine
+from repro.core.cnn_baseline import cnn_costs, cnn_forward
+from repro.core.energy import cnn_energy, snn_energy
+from repro.core.snn_model import SNNConfig
+
+
+@dataclass
+class LegacyStudyResult:
+    dataset: str
+    cnn_acc: float
+    snn_acc: float
+    agreement: float
+    snn_energy_j: np.ndarray
+    cnn_energy_j: float
+    snn_latency_s: np.ndarray
+    cnn_latency_s: float
+    snn_fps_per_w: np.ndarray
+    cnn_fps_per_w: float
+    spikes_per_sample: np.ndarray
+    events_per_sample: np.ndarray
+    overflow: int
+    per_class_spikes: dict = field(default_factory=dict)
+
+
+def legacy_run_study(
+    params,
+    spec: str,
+    dataset_name: str,
+    images,
+    labels,
+    calib_images,
+    *,
+    T: int = 4,
+    depth: int = 256,
+    compressed: bool = True,
+    input_mode: str = "analog",
+    mode: str = "mttfs_cont",
+    balance: bool = True,
+    backend: str | None = None,
+    use_queues: bool = False,
+    weight_bits: int = 8,
+    vmem_resident: bool = True,
+    batch: int = 64,
+) -> LegacyStudyResult:
+    H = images.shape[1]
+    C = images.shape[-1]
+    cfg = SNNConfig(
+        spec=spec, input_hw=H, input_c=C, T=T, depth=depth,
+        compressed=compressed, input_mode=input_mode, mode=mode,
+    )
+    snn_params, thresholds = conversion.convert(params, spec, calib_images)
+    if balance:
+        thresholds = conversion.balance_thresholds(
+            snn_params, thresholds, cfg, params, calib_images[:128]
+        )
+
+    # --- CNN side (static) ---
+    logits_cnn = cnn_forward(params, spec, images, weight_bits=weight_bits,
+                             act_bits=weight_bits)
+    cnn_pred = jnp.argmax(logits_cnn, -1)
+    cnn_acc = float((cnn_pred == labels).mean())
+    costs = cnn_costs(params, spec, H, C, weight_bits, weight_bits)
+    e_cnn = cnn_energy(costs, bits=weight_bits)
+
+    # --- SNN side (per-sample distributions) ---
+    backend = backend or ("queue" if use_queues else "dense")
+    infer = lambda ims: engine.infer_batch(  # noqa: E731
+        snn_params, thresholds, cfg, ims, backend=backend)
+    preds, energies, latencies, spikes, events, overflow = [], [], [], [], [], 0
+    fmt = encoding.make_format(H, 3, compressed=compressed)
+    wb = encoding.word_nbytes(fmt)
+    for i in range(0, images.shape[0], batch):
+        logits, stats = infer(images[i : i + batch])
+        preds.append(np.asarray(jnp.argmax(logits, -1)))
+        e = snn_energy(stats, word_bytes=wb, vmem_resident=vmem_resident)
+        energies.append(np.asarray(e.total_j))
+        latencies.append(np.asarray(e.latency_s))
+        spikes.append(np.asarray(stats.spikes_out.sum(-1)))
+        events.append(np.asarray(stats.events_in.sum(-1)))
+        overflow += int(stats.overflow.sum())
+
+    snn_pred = np.concatenate(preds)
+    labels_np = np.asarray(labels)
+    snn_energy_j = np.concatenate(energies)
+    snn_latency_s = np.concatenate(latencies)
+    spikes_np = np.concatenate(spikes)
+
+    per_class = {
+        int(k): float(spikes_np[labels_np == k].mean())
+        for k in np.unique(labels_np)
+    }
+
+    snn_power = snn_energy_j / snn_latency_s
+    from repro.core.energy import STATIC_POWER_W
+
+    snn_fpw = 1.0 / (snn_latency_s * (snn_power + STATIC_POWER_W))
+    cnn_power = float(e_cnn.total_j / e_cnn.latency_s)
+    cnn_fpw = 1.0 / (float(e_cnn.latency_s) * (cnn_power + STATIC_POWER_W))
+
+    return LegacyStudyResult(
+        dataset=dataset_name,
+        cnn_acc=cnn_acc,
+        snn_acc=float((snn_pred == labels_np).mean()),
+        agreement=float((snn_pred == np.asarray(cnn_pred)).mean()),
+        snn_energy_j=snn_energy_j,
+        cnn_energy_j=float(e_cnn.total_j),
+        snn_latency_s=snn_latency_s,
+        cnn_latency_s=float(e_cnn.latency_s),
+        snn_fps_per_w=snn_fpw,
+        cnn_fps_per_w=cnn_fpw,
+        spikes_per_sample=spikes_np,
+        events_per_sample=np.concatenate(events),
+        overflow=overflow,
+        per_class_spikes=per_class,
+    )

@@ -1,0 +1,22 @@
+"""Shared exact-equality comparison for study reports.
+
+One place lists the StudyResult/Report fields, so the shim-parity test
+(test_system) and the golden/repricing tests (test_study) can never drift
+apart on what "numerically identical" covers.
+"""
+import numpy as np
+
+SCALAR_FIELDS = ("dataset", "cnn_acc", "snn_acc", "agreement",
+                 "cnn_energy_j", "cnn_latency_s", "cnn_fps_per_w",
+                 "overflow", "per_class_spikes")
+ARRAY_FIELDS = ("snn_energy_j", "snn_latency_s", "snn_fps_per_w",
+                "spikes_per_sample", "events_per_sample")
+
+
+def assert_reports_identical(a, b):
+    """Every StudyResult field of ``a`` equals ``b``'s, arrays bit-exact."""
+    for f in SCALAR_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    for f in ARRAY_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)

@@ -4,6 +4,27 @@ import os
 # host devices, inside launch/dryrun.py only — never globally).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import pytest
+
+
+@pytest.fixture
+def make_snn_config():
+    """Factory for the ``SNNConfig(spec=..., input_hw=..., ...)`` boilerplate.
+
+    Defaults the fields almost every test repeats (``input_c=1``,
+    ``depth=64``); anything else is a keyword override:
+
+        cfg = make_snn_config("6C3-P2-4C3-8", 10, T=3, mode="mttfs")
+    """
+    from repro.core.snn_model import SNNConfig
+
+    def make(spec: str, input_hw: int, input_c: int = 1, *, depth: int = 64,
+             **overrides) -> SNNConfig:
+        return SNNConfig(spec=spec, input_hw=input_hw, input_c=input_c,
+                         depth=depth, **overrides)
+
+    return make
+
 # hypothesis is a dev extra (see pyproject.toml); the suite must collect and
 # run without it — property-based tests import through tests/_prop.py, which
 # degrades @given into a skip marker when the package is absent.

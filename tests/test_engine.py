@@ -12,7 +12,6 @@ import pytest
 
 from repro.core import engine, neuron, snn_model
 from repro.core.engine import SpecError, compile_plan, parse_spec
-from repro.core.snn_model import SNNConfig
 
 
 SPEC = "6C3-P2-4C3-8"
@@ -47,11 +46,11 @@ def _stats_equal(a, b, msg=""):
 
 @pytest.mark.parametrize("mode", neuron.MODES)
 @pytest.mark.parametrize("input_mode", ["analog", "binary"])
-def test_queue_and_dense_backends_agree(net, mode, input_mode):
+def test_queue_and_dense_backends_agree(net, make_snn_config, mode, input_mode):
     """Identical logits and identical SNNStats, every mode x input encoding."""
     params, th, img = net
-    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3, depth=64,
-                    mode=mode, input_mode=input_mode)
+    cfg = make_snn_config(SPEC, HW, C, T=3, mode=mode,
+                          input_mode=input_mode)
     lq, sq = snn_model.snn_infer(params, th, cfg, img)
     ld, sd = snn_model.snn_dense_infer(params, th, cfg, img)
     np.testing.assert_allclose(np.asarray(lq), np.asarray(ld),
@@ -60,11 +59,10 @@ def test_queue_and_dense_backends_agree(net, mode, input_mode):
     assert int(sq.overflow) == 0  # parity regime: nothing dropped
 
 
-def test_scan_equals_unrolled(net):
+def test_scan_equals_unrolled(net, make_snn_config):
     """lax.scan time loop == the seed's unrolled per-step loop."""
     params, th, img = net
-    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=4, depth=64,
-                    mode="mttfs_cont")
+    cfg = make_snn_config(SPEC, HW, C, T=4, mode="mttfs_cont")
     ls, ss = engine.infer(params, th, cfg, img, backend="dense")
     lu, su = engine.infer(params, th, cfg, img, backend="dense_unrolled")
     np.testing.assert_allclose(np.asarray(ls), np.asarray(lu),
@@ -72,14 +70,14 @@ def test_scan_equals_unrolled(net):
     _stats_equal(ss, su)
 
 
-def test_pallas_queue_backend_matches_dense(net):
+def test_pallas_queue_backend_matches_dense(make_snn_config):
     """The kernels/event_accum Pallas path is a drop-in queue accumulator."""
     spec = "4C3-6"
     params = snn_model.init_params(jax.random.PRNGKey(3), spec, 6, 1)
     th = [jnp.asarray(0.4)] * 2
     img = jnp.asarray(np.random.default_rng(5).random((6, 6, 1)), jnp.float32)
-    cfg = SNNConfig(spec=spec, input_hw=6, input_c=1, T=2, depth=16,
-                    mode="mttfs_cont", input_mode="binary")
+    cfg = make_snn_config(spec, 6, depth=16, T=2, mode="mttfs_cont",
+                          input_mode="binary")
     lp, sp = engine.infer(params, th, cfg, img, backend="queue_pallas")
     ld, sd = engine.infer(params, th, cfg, img, backend="dense")
     np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
@@ -87,9 +85,9 @@ def test_pallas_queue_backend_matches_dense(net):
     _stats_equal(sp, sd)
 
 
-def test_batch_infer_matches_per_sample(net):
+def test_batch_infer_matches_per_sample(net, make_snn_config):
     params, th, img = net
-    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3, depth=64)
+    cfg = make_snn_config(SPEC, HW, C, T=3)
     imgs = jnp.stack([img, img * 0.5])
     lb, sb = engine.infer_batch(params, th, cfg, imgs, backend="dense")
     l0, s0 = engine.infer(params, th, cfg, imgs[1], backend="dense")
@@ -99,9 +97,9 @@ def test_batch_infer_matches_per_sample(net):
                                   np.asarray(s0.spikes_out))
 
 
-def test_runner_is_jit_cached(net):
+def test_runner_is_jit_cached(net, make_snn_config):
     params, th, img = net
-    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3, depth=64)
+    cfg = make_snn_config(SPEC, HW, C, T=3)
     f1 = engine._runner(cfg, "dense", False)
     f2 = engine._runner(cfg, "dense", False)
     assert f1 is f2  # one compiled executable per (cfg, backend, batched)
@@ -183,9 +181,9 @@ def test_compile_plan_rejects(bad, hw, fragment):
     assert fragment in str(e.value)
 
 
-def test_execute_rejects_mismatched_params(net):
+def test_execute_rejects_mismatched_params(net, make_snn_config):
     params, th, img = net
-    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2, depth=64)
+    cfg = make_snn_config(SPEC, HW, C, T=2)
     with pytest.raises(ValueError, match="layers"):
         engine.infer(params[:-1], th, cfg, img, backend="dense")
 
@@ -194,10 +192,9 @@ def test_execute_rejects_mismatched_params(net):
 # Registries
 # ---------------------------------------------------------------------------
 
-def test_unknown_neuron_mode_lists_registered(net):
+def test_unknown_neuron_mode_lists_registered(net, make_snn_config):
     params, th, img = net
-    cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2, depth=64,
-                    mode="nope")
+    cfg = make_snn_config(SPEC, HW, C, T=2, mode="nope")
     with pytest.raises(ValueError, match="mttfs"):
         snn_model.snn_dense_infer(params, th, cfg, img)
 
@@ -207,7 +204,7 @@ def test_unknown_backend_lists_registered():
         engine.get_backend("nope")
 
 
-def test_custom_neuron_mode_runs_through_both_backends(net):
+def test_custom_neuron_mode_runs_through_both_backends(net, make_snn_config):
     """Adding a neuron model is a one-file change: register and run."""
     params, th, img = net
 
@@ -217,8 +214,7 @@ def test_custom_neuron_mode_runs_through_both_backends(net):
 
     try:
         neuron.register_neuron_model("test_silent", fire_never)
-        cfg = SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2, depth=64,
-                        mode="test_silent")
+        cfg = make_snn_config(SPEC, HW, C, T=2, mode="test_silent")
         for backend in ("dense", "queue"):
             logits, stats = engine.infer(params, th, cfg, img,
                                          backend=backend)

@@ -38,7 +38,7 @@ def test_event_dense_counts_only_spikes():
     assert int(n_ops) == 3 * 4
 
 
-def test_queue_path_equals_dense_path():
+def test_queue_path_equals_dense_path(make_snn_config):
     """snn_infer (AEQs, the hardware model) and snn_dense_infer (reference
     dynamics) produce identical logits and event statistics."""
     spec = "8C3-P3-6C3-10"
@@ -48,9 +48,8 @@ def test_queue_path_equals_dense_path():
     img = jnp.asarray(rng.random((12, 12, 1)), jnp.float32)
 
     for input_mode in ("analog", "binary"):
-        cfg = snn_model.SNNConfig(
-            spec=spec, input_hw=12, input_c=1, T=3, depth=64,
-            input_mode=input_mode, mode="mttfs_cont")
+        cfg = make_snn_config(spec, 12, T=3, input_mode=input_mode,
+                              mode="mttfs_cont")
         lq, sq = snn_model.snn_infer(params, th, cfg, img)
         ld, sd = snn_model.snn_dense_infer(params, th, cfg, img)
         np.testing.assert_allclose(np.asarray(lq), np.asarray(ld),
@@ -62,7 +61,7 @@ def test_queue_path_equals_dense_path():
         assert int(sq.overflow) == int(sd.overflow) == 0
 
 
-def test_neuron_modes_differ_as_specified():
+def test_neuron_modes_differ_as_specified(make_snn_config):
     """spike-once emits <= 1 spike per neuron; continuous emits >= as many."""
     spec = "8C3-10"
     params = snn_model.init_params(jax.random.PRNGKey(2), spec, 9, 1)
@@ -70,8 +69,7 @@ def test_neuron_modes_differ_as_specified():
     img = jnp.asarray(np.random.default_rng(0).random((9, 9, 1)), jnp.float32)
 
     def spikes(mode):
-        cfg = snn_model.SNNConfig(spec=spec, input_hw=9, input_c=1, T=4,
-                                  depth=64, mode=mode)
+        cfg = make_snn_config(spec, 9, T=4, mode=mode)
         _, stats = snn_model.snn_dense_infer(params, th, cfg, img)
         return int(stats.spikes_out.sum())
 
