@@ -139,5 +139,97 @@ def snn_engine_scan_bench():
              f"{mins['dense_unrolled'] / mins['dense']:.2f}")
 
 
+def snn_engine_queue_bench():
+    """The fused batch-native queue pipeline vs its two predecessors.
+
+    Two comparisons, both interleaved min-of-N (the box is load-noisy;
+    min-of-N under interleaving is the noise-robust estimator):
+
+    1. Kernel level, at paper scale (28x28 first conv of the MNIST net,
+       D=256): the fused compiled pipeline vs the retired interpreter path
+       (``kernels/event_accum`` with interpret=True — what ``queue_pallas``
+       executed before the fusion). This is the ``vs_interp`` speedup row
+       the event path's "real fast path" claim rests on.
+    2. Engine level, full MNIST spec at batch 16: ``queue_pallas`` (one
+       batched plan, batch axis in the kernel grid) vs ``dense`` and vs the
+       word-level ``queue`` reference under its outer per-sample vmap.
+    """
+    import time
+
+    from repro.core import aeq, encoding, engine, snn_model
+    from repro.core.snn_model import SNNConfig
+    from repro.kernels import ops
+
+    def interleaved_min(fns, rounds, first_out=None):
+        mins = {}
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())      # trace + compile + first run
+            if first_out is not None:
+                first_out[name] = (time.perf_counter() - t0) * 1e3
+            mins[name] = float("inf")
+        for _ in range(rounds):              # interleaved: same load for all
+            for name, fn in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                mins[name] = min(mins[name], time.perf_counter() - t0)
+        return mins
+
+    # --- 1. kernel level: fused compiled vs interpreter, paper scale ------
+    hw, c_in, c_out, depth = 28, 1, 32, 256
+    fmt = encoding.make_format(hw, 3)
+    rng = np.random.default_rng(7)
+    raster = (rng.random((1, c_in, hw, hw)) < 0.15).astype(np.float32)
+    q = aeq.aeq_from_raster(fmt, jnp.asarray(raster), depth)
+    occ = aeq.phase_occupancy(
+        fmt, jnp.moveaxis(jnp.asarray(raster), 1, -1))   # (1, C, K2, P)
+    w = jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+    vm = jnp.zeros((hw, hw, c_out), jnp.float32)
+    kw = dict(K=3, n_win=fmt.n_win, bits=fmt.bits_coord)
+
+    from repro.kernels.event_accum import event_accum as raw_event_accum
+
+    mins = interleaved_min({
+        "fused": lambda: ops.fused_spike_accum(
+            occ, w, depth=depth, H=hw, W=hw, invalid=fmt.invalid_word, **kw),
+        # interpret=True pinned explicitly: this row IS the interpreter
+        # baseline, regardless of platform or REPRO_PALLAS_COMPILE
+        "interp": lambda: raw_event_accum(q.words[0], q.counts[0], w, vm,
+                                          interpret=True, **kw),
+    }, rounds=4)
+    emit("kernel/snn_queue_fused_paper_scale", mins["fused"] * 1e6,
+         f"hw={hw};c_out={c_out};depth={depth};"
+         f"events={int(q.counts.sum())};impl={ops.default_spike_impl()}")
+    emit("kernel/snn_queue_interp_paper_scale", mins["interp"] * 1e6,
+         f"hw={hw};c_out={c_out};depth={depth};impl=pallas_interpret")
+    emit("kernel/snn_queue_fused_vs_interp", 0.0,
+         f"steady_vs_interp_x={mins['interp'] / mins['fused']:.1f};"
+         f"paper_scale=28x28xC{c_in}toC{c_out}_D{depth}")
+
+    # --- 2. engine level: batched plan vs dense and vmapped queue ---------
+    spec = "32C3-P2-32C3-P2-10"
+    params = snn_model.init_params(jax.random.PRNGKey(0), spec, 28, 1)
+    th = [jnp.asarray(1.0)] * len(snn_model.parse_spec(spec))
+    imgs = jnp.asarray(np.random.default_rng(8).random((16, 28, 28, 1)),
+                       jnp.float32)
+    cfg = SNNConfig(spec=spec, input_hw=28, input_c=1, T=4, depth=256,
+                    mode="mttfs_cont", input_mode="binary")
+    first, fns = {}, {
+        "fused_batch": lambda: engine.infer_batch(
+            params, th, cfg, imgs, backend="queue_pallas"),
+        "queue_vmap": lambda: engine.infer_batch(
+            params, th, cfg, imgs, backend="queue"),
+        "dense": lambda: engine.infer_batch(
+            params, th, cfg, imgs, backend="dense"),
+    }
+    mins = interleaved_min(fns, rounds=8, first_out=first)
+    for name in fns:
+        emit(f"kernel/snn_queue_engine_{name}_T4", mins[name] * 1e6,
+             f"spec={spec};batch=16;first_call_ms={first[name]:.0f}")
+    emit("kernel/snn_queue_engine_speedup_T4", 0.0,
+         f"steady_vs_queue_vmap_x={mins['queue_vmap'] / mins['fused_batch']:.2f};"
+         f"steady_vs_dense_x={mins['dense'] / mins['fused_batch']:.2f}")
+
+
 ALL = [event_accum_bench, spike_compact_bench, quant_matmul_bench,
-       moe_gather_bench, snn_engine_scan_bench]
+       moe_gather_bench, snn_engine_scan_bench, snn_engine_queue_bench]

@@ -3,12 +3,22 @@
 Reads experiments/dryrun/<mesh>/*.json (produced by launch/dryrun.py) and
 emits one CSV row per (arch x shape): the three terms, the bottleneck, and
 MODEL_FLOPS / HLO_FLOPs (useful-compute ratio).
+
+The dry-run is a separate *process* by design (it must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+initializes, which would poison every other suite in this process). When its
+artifacts are absent the rows are therefore *dropped with a logged reason*
+rather than emitted as dead ``missing=...`` placeholders — a perf snapshot
+should only contain rows that measured something. ``benchmarks.run
+--with-dryrun`` generates the artifacts first (subprocess) and then these
+rows appear.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
 
 from .common import emit
 
@@ -20,7 +30,10 @@ def roofline_rows(mesh: str = "16x16"):
         if "__hc_" not in p and "__unrolled" not in p  # §Perf variants
     )
     if not files:
-        emit(f"roofline/{mesh}", 0.0, "missing=run launch/dryrun.py first")
+        print(f"# roofline/{mesh}: no dry-run artifacts under {root} — "
+              "rows dropped (run `PYTHONPATH=src python -m benchmarks.run "
+              "--with-dryrun`, or `python -m repro.launch.dryrun --all` "
+              "directly, to generate them)", file=sys.stderr)
         return
     for path in files:
         rec = json.load(open(path))
@@ -34,11 +47,12 @@ def roofline_rows(mesh: str = "16x16"):
             continue
         t = rec["roofline_terms_s"]
         ratio = rec.get("useful_flops_ratio")
+        ratio_s = f"{ratio:.3f}" if ratio else "n/a"
         emit(f"roofline/{mesh}/{cell}", rec["compile_s"] * 1e6,
              f"compute_s={t['compute_s']:.3e};memory_s={t['memory_s']:.3e};"
              f"collective_s={t['collective_s']:.3e};"
              f"bottleneck={rec['bottleneck'].replace('_s', '')};"
-             f"useful_flops_ratio={ratio:.3f}" if ratio else "n/a")
+             f"useful_flops_ratio={ratio_s}")
 
 
 def roofline_multi_pod():

@@ -64,13 +64,39 @@ def write_snapshot(path: str, failures: int) -> None:
     print(f"# wrote {len(snap['rows'])} rows to {path}", file=sys.stderr)
 
 
+def _run_dryrun(multi_pod: bool) -> None:
+    """Generate the roofline dry-run artifacts in a subprocess.
+
+    A subprocess because launch/dryrun.py must set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+    initializes — doing that in-process would poison every other suite.
+    """
+    import subprocess
+
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--all"]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    print(f"# --with-dryrun: {' '.join(cmd)}", file=sys.stderr)
+    subprocess.run(cmd, check=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="substring filter on benchmark function names")
     ap.add_argument("--json", default="", metavar="OUT",
                     help="write a BENCH_*.json perf snapshot to OUT")
+    ap.add_argument("--with-dryrun", action="store_true",
+                    help="first run launch/dryrun.py (subprocess) so the "
+                         "roofline/* rows have artifacts to read; without "
+                         "it, missing roofline rows are dropped with a "
+                         "logged reason")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="with --with-dryrun: also compile the 2x16x16 mesh")
     args = ap.parse_args()
+
+    if args.with_dryrun:
+        _run_dryrun(args.multi_pod)
 
     from . import break_even, distributions, kernel_bench, memory_study, \
         paper_tables, roofline_report

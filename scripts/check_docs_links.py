@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Fail if any intra-repo markdown link points at a missing file.
+
+Scans every tracked ``*.md`` under the repo root (top level + docs/) for
+``[text](target)`` links, resolves relative targets against the containing
+file, and exits non-zero listing the broken ones. External (http/https/
+mailto) links and pure in-page anchors are ignored; ``path#anchor`` is
+checked for the path part only.
+
+    python scripts/check_docs_links.py [root]
+
+Run by the CI docs job so a renamed doc (or a doc referencing a deleted
+entry point) cannot silently rot the index.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def broken_links(root: Path) -> list[str]:
+    md_files = sorted(root.glob("*.md")) + sorted(root.glob("docs/*.md"))
+    problems = []
+    for md in md_files:
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(root)}: broken link -> {target}")
+    return problems
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path.cwd()
+    problems = broken_links(root.resolve())
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(f"{len(problems)} broken markdown link(s)", file=sys.stderr)
+        return 1
+    print("all intra-repo markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

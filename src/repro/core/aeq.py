@@ -121,11 +121,20 @@ def aeq_from_raster(fmt: AEFormat, raster: jnp.ndarray, depth: int) -> AEQ:
     return aeq
 
 
-def decode_positions(fmt: AEFormat, words: jnp.ndarray):
-    """(K2, depth) packed words -> absolute (y, x, valid) positions.
+def aeq_from_raster_batch(fmt: AEFormat, raster: jnp.ndarray, depth: int) -> AEQ:
+    """(B, T, C, H, W) 0/1 raster -> AEQ with a leading batch axis per field."""
+    import jax
 
-    y = i_c * K + ky with phase ph = ky*K + kx implicit in the row index —
-    the 'implicit coordinate' trick of the compressed encoding (Sec. 5.2).
+    return jax.vmap(lambda r: aeq_from_raster(fmt, r, depth))(raster)
+
+
+def decode_positions(fmt: AEFormat, words: jnp.ndarray):
+    """(..., K2, depth) packed words -> absolute (y, x, valid) positions.
+
+    y = i_c * K + ky with phase ph = ky*K + kx implicit in the second-to-last
+    axis index — the 'implicit coordinate' trick of the compressed encoding
+    (Sec. 5.2). Leading axes (channel, batch, time) broadcast through, so
+    batched queues decode without an outer vmap.
     """
     K = fmt.kernel
     K2 = K * K
@@ -139,3 +148,65 @@ def decode_positions(fmt: AEFormat, words: jnp.ndarray):
 
 def aeq_total_events(aeq: AEQ) -> jnp.ndarray:
     return aeq.counts.sum()
+
+
+# ---------------------------------------------------------------------------
+# Batched segment views (the fused pipeline's queue-boundary helpers)
+# ---------------------------------------------------------------------------
+
+def phase_occupancy(fmt: AEFormat, raster: jnp.ndarray) -> jnp.ndarray:
+    """(..., H, W, C) channels-last raster -> (..., C, K2, P) occupancy.
+
+    The per-(channel, phase) window occupancy that feeds the fused
+    compact+accumulate kernel: position index p = wy * n_win + wx, matching
+    :func:`_phase_split`'s window-row-major queue append order exactly (the
+    drop rule under overflow depends on this order). Works for any number of
+    leading axes — (T, H, W, C) per sample, (B, T, H, W, C) batched.
+    """
+    K, n = fmt.kernel, fmt.n_win
+    *lead, H, W, C = raster.shape
+    L = len(lead)
+    m = jnp.pad(raster, [(0, 0)] * L + [(0, n * K - H), (0, n * K - W), (0, 0)])
+    m = m.reshape(*lead, n, K, n, K, C)
+    # (..., wy, ky, wx, kx, C) -> (..., C, ky, kx, wy, wx)
+    perm = list(range(L)) + [L + 4, L + 1, L + 3, L + 0, L + 2]
+    m = m.transpose(perm)
+    return m.reshape(*lead, C, K * K, n * n).astype(jnp.int32)
+
+
+def segment_keep(occ: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Which occupancy positions survive a depth-``depth`` queue (bool mask).
+
+    Mirrors :func:`compact_spikes`: events append in window-row-major order
+    and the queue drops everything past ``depth``. When ``depth >= P`` no
+    segment can overflow and the cumsum is statically elided.
+    """
+    fired = occ > 0
+    if depth >= occ.shape[-1]:
+        return fired
+    slot = jnp.cumsum(fired.astype(jnp.int32), axis=-1) - 1
+    return fired & (slot < depth)
+
+
+def span_map(fmt: AEFormat, hw: int) -> jnp.ndarray:
+    """(K2, P) static map: in-bounds kernel offsets per (phase, window) slot.
+
+    ``span(y) * span(x)`` — the adds an event-driven engine issues per event
+    (before the C_out fan-out); the analytic op counter for accumulators
+    that do not report per-event work. Padding positions (y or x >= hw) get
+    0, but occupancy there is always 0 anyway.
+    """
+    K, n = fmt.kernel, fmt.n_win
+    pad = K // 2
+    pos = jnp.arange(n * n, dtype=jnp.int32)
+    wy, wx = pos // n, pos % n
+    ph = jnp.arange(K * K, dtype=jnp.int32)[:, None]
+    y = wy[None, :] * K + ph // K
+    x = wx[None, :] * K + ph % K
+
+    def span(p):  # offsets d in [0, K) with 0 <= p - d + pad < hw
+        lo = jnp.maximum(0, p + pad - hw + 1)
+        hi = jnp.minimum(K - 1, p + pad)
+        return jnp.maximum(hi - lo + 1, 0)
+
+    return (span(y) * span(x) * (y < hw) * (x < hw)).astype(jnp.int32)

@@ -23,9 +23,15 @@ units. This module is the software mirror of that structure:
    - ``dense_unrolled`` : the seed implementation's unrolled per-step Python
                           loop, kept as a tracing/benchmark reference.
    - ``queue``          : hardware-faithful AEQ path (``core/aeq`` +
-                          ``snn_layers.event_conv2d``).
-   - ``queue_pallas``   : same schedule, accumulation through the
-                          ``kernels/event_accum`` Pallas TPU kernel.
+                          ``snn_layers.event_conv2d``), word-level reference.
+   - ``queue_pallas``   : same schedule through the *fused* spike pipeline
+                          (``kernels/spike_pipeline``): compaction +
+                          accumulation in one compiled, batch-native kernel
+                          (Pallas on TPU, fused-conv XLA elsewhere — never
+                          the Pallas interpreter). Declares
+                          ``supports_batch``, so ``infer_batch`` runs one
+                          batched plan with the batch axis in the kernel
+                          grid instead of an outer ``jax.vmap``.
 
 Entry points ``infer`` / ``infer_batch`` are jit-compiled once per
 (config, backend, batched) triple and cached; ``snn_model.snn_infer`` /
@@ -41,7 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from . import encoding
-from .aeq import AEQ, aeq_from_raster, decode_positions
+from .aeq import (AEQ, aeq_from_raster, phase_occupancy, segment_keep,
+                  span_map)
 from .encoding import AEFormat, encode_ttfs
 from .neuron import NeuronModel, _on_registry_change, get_neuron_model
 from .snn_layers import dense_conv_hwc, event_conv2d, spike_maxpool_hwc
@@ -304,28 +311,9 @@ def _segment_occupancy(fmt: AEFormat, raster: jnp.ndarray) -> jnp.ndarray:
     return occ.astype(jnp.int32)
 
 
-def _event_op_count(fmt: AEFormat, words_t: jnp.ndarray, counts_t: jnp.ndarray,
-                    hw: int, c_out: int) -> jnp.ndarray:
-    """Adds an event-driven engine issues for one queue segment.
-
-    Equals ``sum over queued events of (#in-bounds kernel offsets) * C_out`` —
-    the same number ``event_conv2d`` counts while accumulating; computed
-    analytically here for accumulators (the Pallas kernel) that do not
-    report it.
-    """
-    K = fmt.kernel
-    pad = K // 2
-    y, x, valid = jax.vmap(lambda w: decode_positions(fmt, w))(words_t)
-    slot = jnp.arange(words_t.shape[-1], dtype=jnp.int32)
-    live = valid & (slot[None, None, :] < counts_t[..., None])
-
-    def span(p):  # offsets d in [0, K) with 0 <= p - d + pad < hw
-        lo = jnp.maximum(0, p + pad - hw + 1)
-        hi = jnp.minimum(K - 1, p + pad)
-        return jnp.maximum(hi - lo + 1, 0)
-
-    per_event = span(y) * span(x)
-    return (per_event * live).sum().astype(jnp.int32) * c_out
+# (the analytic per-event op counter lives in ``aeq.span_map``: adds per
+# surviving event = in-bounds kernel offsets * C_out, shared by the fused
+# batched queue path below and anything else that cannot count in-kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +329,12 @@ class Backend(Protocol):
     is non-None) — and returns the emitted (T, H', W', C_out) raster plus its
     :class:`LayerStats` row. Neuron dynamics MUST come from
     ``neuron.get_neuron_model(cfg.mode)`` so all backends stay in lockstep.
+
+    A backend may additionally declare ``supports_batch = True`` and provide
+    ``conv_layer_batch`` with the same signature over (B, T, H, W, C) /
+    (B, H, W, C) activity and per-sample (B,)-shaped stats; ``infer_batch``
+    then executes one batched plan instead of vmapping the per-sample
+    program (see :func:`_execute_batch`).
     """
 
     name: str
@@ -385,6 +379,12 @@ def _init_carry(cp: ConvPlan, cfg: SNNConfig, vth, dtype):
         p_latch = jnp.zeros((cp.out_hw, cp.out_hw, cp.out_c), jnp.bool_)
         return (v, latch, p_latch)
     return (v, latch)
+
+
+def _init_carry_batch(cp: ConvPlan, cfg: SNNConfig, vth, dtype, B: int):
+    """The per-sample carry with a leading batch axis (same init values)."""
+    return tuple(jnp.broadcast_to(a, (B,) + a.shape)
+                 for a in _init_carry(cp, cfg, vth, dtype))
 
 
 class DenseBackend:
@@ -462,8 +462,19 @@ class QueueBackend:
     Faithful points (paper Sec. 3.1/4): spike-once latches via the neuron
     registry, no reset, bias as constant input current each step, pooling
     fused into emission, segmented fixed-depth queues, layer-by-layer
-    T-repetition schedule. ``accum='pallas'`` routes the accumulation through
-    the ``kernels/event_accum`` TPU kernel instead of the pure-JAX reference.
+    T-repetition schedule.
+
+    ``accum='jax'`` (the ``queue`` backend) is the word-level reference: it
+    materializes every AEQ (``core/aeq``) and accumulates event by event
+    through ``snn_layers.event_conv2d``. ``accum='pallas'`` (the
+    ``queue_pallas`` backend) runs the *fused* spike pipeline instead —
+    ``kernels/spike_pipeline`` compacts and accumulates in one compiled,
+    batch-native kernel (Pallas on TPU, the fused-conv XLA realization
+    elsewhere; never the Pallas interpreter), and declares
+    ``supports_batch`` so ``infer_batch`` executes one batched plan with the
+    batch axis in the kernel grid rather than an outer ``jax.vmap``. Both
+    drop over-depth events identically, so logits and every stat stay
+    bit-compatible with the reference.
     """
 
     def __init__(self, accum: str = "jax"):
@@ -472,19 +483,20 @@ class QueueBackend:
         self.accum = accum
         self.name = "queue" if accum == "jax" else "queue_pallas"
 
-    def _accumulate(self, cp, v, w, q: AEQ, t):
-        if self.accum == "jax":
-            return event_conv2d(v, w, q, cp.fmt, t)
-        from ..kernels import ops as kops
-
-        v = kops.event_accum(
-            q.words[t], q.counts[t], w, v,
-            K=cp.kernel, n_win=cp.fmt.n_win, bits=cp.fmt.bits_coord)
-        n = _event_op_count(cp.fmt, q.words[t], q.counts[t],
-                            cp.in_hw, cp.out_c)
-        return v, n
+    @property
+    def supports_batch(self) -> bool:
+        """Fused accumulation is batch-native; the word-level path is not."""
+        return self.accum == "pallas"
 
     def conv_layer(self, cp, w, b, vth, cfg, raster, analog):
+        if self.accum == "pallas":
+            # single sample == batch of one through the fused pipeline
+            out, row = self.conv_layer_batch(
+                cp, w, b, vth, cfg,
+                None if raster is None else raster[None],
+                None if analog is None else analog[None])
+            return out[0], LayerStats(*(f[0] for f in row))
+
         model = get_neuron_model(cfg.mode)
         T = cfg.T
 
@@ -508,7 +520,7 @@ class QueueBackend:
             if q is not None:
                 # event-driven: accumulate queued spikes into the membrane,
                 # then step with just the constant bias current
-                v, n = self._accumulate(cp, carry[0], w, q, t)
+                v, n = event_conv2d(carry[0], w, q, cp.fmt, t)
                 carry = (v, *carry[1:])
                 cur_t = jnp.broadcast_to(b, v.shape)
                 ops = ops + n
@@ -522,6 +534,63 @@ class QueueBackend:
 
         row = LayerStats(ev, out_raster.sum().astype(jnp.int32), ops,
                          q_words, ovf)
+        return out_raster, row
+
+    def conv_layer_batch(self, cp, w, b, vth, cfg, raster, analog):
+        """Fused batch-native plan: raster (B, T, H, W, C) in one kernel call.
+
+        All B*T queue-segment sets go through ONE fused compact+accumulate
+        call (the batch axis lives in the kernel grid), stats are derived
+        analytically from the occupancy with the exact drop rule of
+        ``compact_spikes`` (bit-identical to the word-level queue path), and
+        the neuron/pool semantics come from the shared ``_conv_step`` body.
+        """
+        from ..kernels import ops as kops
+
+        model = get_neuron_model(cfg.mode)
+        T = cfg.T
+        fmt = cp.fmt
+        B = (raster if raster is not None else analog).shape[0]
+
+        if raster is not None:
+            occ = phase_occupancy(fmt, raster)         # (B, T, C, K2, P)
+            keep = segment_keep(occ, cfg.depth)
+            tot = (occ > 0).sum(-1)                    # (B, T, C, K2)
+            capped = jnp.minimum(tot, cfg.depth)
+            ev = capped.sum((1, 2, 3)).astype(jnp.int32)       # (B,)
+            q_words = ev
+            ovf = (tot - capped).sum((1, 2, 3)).astype(jnp.int32)
+
+            spans = span_map(fmt, cp.in_hw)            # (K2, P) static
+            ops = ((keep * spans[None, None, None]).sum((1, 2, 3, 4))
+                   * cp.out_c).astype(jnp.int32)
+
+            K2, P = occ.shape[-2:]
+            cur = kops.fused_spike_accum(
+                occ.reshape(B * T, cp.in_c, K2, P), w,
+                K=cp.kernel, n_win=fmt.n_win, bits=fmt.bits_coord,
+                depth=cfg.depth, H=cp.in_hw, W=cp.in_hw,
+                invalid=fmt.invalid_word)
+            cur = cur.reshape(B, T, cp.in_hw, cp.in_hw, cp.out_c) + b
+        else:
+            z = jnp.zeros((B,), jnp.int32)
+            ev, q_words, ovf = z, z, z
+            per_sample = analog.shape[1] * analog.shape[2] * analog.shape[3]
+            ops = jnp.full((B,), T * per_sample * cp.out_c
+                           * cp.kernel * cp.kernel, jnp.int32)
+            c1 = jax.lax.conv_general_dilated(
+                analog.astype(w.dtype), w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+            cur = jnp.broadcast_to(c1[:, None], (B, T) + c1.shape[1:])
+
+        step = jax.vmap(_conv_step(cp, model, vth))
+        carry = _init_carry_batch(cp, cfg, vth, w.dtype, B)
+        _, frames = jax.lax.scan(step, carry, jnp.moveaxis(cur, 1, 0),
+                                 unroll=True)
+        out_raster = jnp.moveaxis(frames, 0, 1)        # (B, T, H', W', C')
+
+        row = LayerStats(ev, out_raster.sum((1, 2, 3, 4)).astype(jnp.int32),
+                         ops, q_words, ovf)
         return out_raster, row
 
 
@@ -579,6 +648,18 @@ def _encode_input(cfg: SNNConfig, image: jnp.ndarray):
         f"unknown input_mode {cfg.input_mode!r} (expected 'analog' or 'binary')")
 
 
+def _encode_input_batch(cfg: SNNConfig, images: jnp.ndarray):
+    # (B, H, W, C): the encodings are elementwise, so batching is a
+    # broadcast + axis move (encode_ttfs emits time-major (T, B, ...))
+    if cfg.input_mode == "binary":
+        raster = encode_ttfs(images, cfg.T, cfg.input_theta)
+        return jnp.moveaxis(raster, 0, 1), None
+    if cfg.input_mode == "analog":
+        return None, images
+    raise ValueError(
+        f"unknown input_mode {cfg.input_mode!r} (expected 'analog' or 'binary')")
+
+
 def _execute(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
              params, thresholds, image):
     if len(params) != plan.n_layers:
@@ -612,17 +693,82 @@ def _execute(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
     return logits, stats
 
 
+def _output_layer_batch(params_out, T: int, raster: jnp.ndarray):
+    """:func:`_output_layer` over a (B, T, ...) raster — same math, batched."""
+    w, b = params_out["w"], params_out["b"]
+    B = raster.shape[0]
+    flat = raster.reshape(B, T, -1)
+    logits = (flat @ w).sum(1) + b * T
+    ev = (flat > 0).sum(axis=(1, 2)).astype(jnp.int32)
+    z = jnp.zeros((B,), jnp.int32)
+    row = LayerStats(ev, z, ev * jnp.int32(w.shape[1]), z, z)
+    return logits, row
+
+
+def _execute_batch(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
+                   params, thresholds, images):
+    """The batched execution plan: one plan walk over (B, ...) activity.
+
+    Same structure as :func:`_execute`, but every conv stage runs the
+    backend's ``conv_layer_batch`` hook — for the fused queue pipeline that
+    means the batch axis sits in the kernel grid instead of an outer
+    ``jax.vmap`` — and stats come out with a leading per-sample axis
+    (events_in (B, L), overflow (B,), ...), matching the vmapped layout.
+    """
+    if len(params) != plan.n_layers:
+        raise ValueError(
+            f"params pytree has {len(params)} layers but spec "
+            f"{plan.spec!r} has {plan.n_layers}")
+    if len(thresholds) != plan.n_layers:
+        raise ValueError(
+            f"thresholds list has {len(thresholds)} entries but spec "
+            f"{plan.spec!r} has {plan.n_layers} layers")
+
+    raster, analog = _encode_input_batch(cfg, images)
+    rows: list[LayerStats] = []
+    for cp in plan.convs:
+        w, b = params[cp.index]["w"], params[cp.index]["b"]
+        raster, row = backend.conv_layer_batch(
+            cp, w, b, thresholds[cp.index], cfg, raster, analog)
+        analog = None
+        rows.append(row)
+
+    logits, row = _output_layer_batch(params[plan.out.index], cfg.T, raster)
+    rows.append(row)
+
+    B = logits.shape[0]
+    stats = SNNStats(
+        events_in=jnp.stack([r.events_in for r in rows], axis=1),
+        spikes_out=jnp.stack([r.spikes_out for r in rows], axis=1),
+        add_ops=jnp.stack([r.add_ops for r in rows], axis=1),
+        overflow=sum((r.overflow for r in rows), jnp.zeros((B,), jnp.int32)),
+        queue_words=jnp.stack([r.queue_words for r in rows], axis=1),
+    )
+    return logits, stats
+
+
 @functools.lru_cache(maxsize=None)
 def _runner(cfg: SNNConfig, backend_name: str, batched: bool):
-    """One jit-compiled executable per (config, backend, batched) triple."""
+    """One jit-compiled executable per (config, backend, batched) triple.
+
+    Batched execution prefers a backend's native batched plan
+    (``supports_batch`` + ``conv_layer_batch``) — the fused queue pipeline —
+    and falls back to ``jax.vmap`` of the per-sample program otherwise.
+    """
     backend = get_backend(backend_name)
     plan = compile_plan(cfg.spec, cfg.input_hw, cfg.input_c, cfg.compressed)
 
-    def run(params, thresholds, image):
-        return _execute(plan, backend, cfg, params, tuple(thresholds), image)
+    if batched and getattr(backend, "supports_batch", False):
+        def run(params, thresholds, images):
+            return _execute_batch(plan, backend, cfg, params,
+                                  tuple(thresholds), images)
+    else:
+        def run(params, thresholds, image):
+            return _execute(plan, backend, cfg, params, tuple(thresholds),
+                            image)
 
-    if batched:
-        run = jax.vmap(run, in_axes=(None, None, 0))
+        if batched:
+            run = jax.vmap(run, in_axes=(None, None, 0))
     return jax.jit(run)
 
 
@@ -634,7 +780,12 @@ def infer(params, thresholds, cfg: SNNConfig, image, *,
 
 def infer_batch(params, thresholds, cfg: SNNConfig, images, *,
                 backend: str = "dense"):
-    """Run a (N, H, W, C) batch (vmapped); returns batched (logits, stats)."""
+    """Run a (N, H, W, C) batch; returns batched (logits, stats).
+
+    Backends with a native batched plan (``queue_pallas``) execute it here —
+    batch axis in the kernel grid; everything else is vmapped. Either way
+    stats come back with a leading per-sample axis.
+    """
     return _runner(cfg, backend, True)(params, tuple(thresholds), images)
 
 

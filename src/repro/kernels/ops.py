@@ -17,12 +17,52 @@ from .event_accum import event_accum as _event_accum
 from .moe_gather import moe_gather as _moe_gather
 from .quant_matmul import quant_matmul as _quant_matmul
 from .spike_compact import spike_compact as _spike_compact
+from .spike_pipeline import (fused_spike_accum_pallas as _fused_pallas,
+                             fused_spike_accum_xla as _fused_xla)
 
 
 def _interpret() -> bool:
     if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
         return False
     return jax.default_backend() != "tpu"
+
+
+def default_spike_impl() -> str:
+    """Default implementation of the fused spike pipeline — never interpret.
+
+    'pallas' (compiled Mosaic) on TPU; 'xla' (the fused-conv realization of
+    the same semantics) everywhere else — keyed off the actual jax backend,
+    not REPRO_PALLAS_COMPILE, so a host that *meant* to compile for TPU but
+    fell back to CPU still runs (compiled) rather than crashing in Mosaic
+    lowering. The Pallas *interpreter* is only reachable by explicit
+    request (``impl='pallas_interpret'``) — it is a logic-validation tool,
+    not an execution path.
+    """
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def fused_spike_accum(occ, weights, *, K, n_win, bits, depth, H, W,
+                      invalid=0, seg=None, impl=None):
+    """Fused compact+accumulate: (N, C_in, K2, P) occupancy -> (N, H, W, C_out).
+
+    ``impl``: None -> :func:`default_spike_impl`; explicit 'xla', 'pallas',
+    'pallas_interpret', or 'ref' select a realization (all bit-compatible in
+    which events they accumulate; float summation order differs).
+    """
+    impl = impl or default_spike_impl()
+    if impl == "ref":
+        return _ref.fused_spike_accum_ref(occ, weights, K=K, n_win=n_win,
+                                          depth=depth, H=H, W=W)
+    if impl == "xla":
+        return _fused_xla(occ, weights, K=K, n_win=n_win, depth=depth,
+                          H=H, W=W)
+    if impl in ("pallas", "pallas_interpret"):
+        return _fused_pallas(occ, weights, K=K, n_win=n_win, bits=bits,
+                             depth=depth, H=H, W=W, invalid=invalid, seg=seg,
+                             interpret=(impl == "pallas_interpret"))
+    raise ValueError(
+        f"unknown fused_spike_accum impl {impl!r} "
+        "(expected 'xla', 'pallas', 'pallas_interpret', or 'ref')")
 
 
 def event_accum(words, counts, weights, v_mem, *, K, n_win, bits, backend="pallas"):

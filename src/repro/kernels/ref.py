@@ -67,6 +67,48 @@ def spike_compact_ref(occ, *, n_win, bits, depth, invalid):
     return words, counts
 
 
+def fused_spike_accum_ref(occ, weights, *, K, n_win, depth, H, W):
+    """Oracle for kernels.spike_pipeline.fused_spike_accum: per-event scatter.
+
+    occ (N, C_in, K2, P) int32 occupancy, weights (K, K, C_in, C_out) ->
+    (N, H, W, C_out). Applies the compact-stage drop rule explicitly (events
+    beyond ``depth`` per (c, phase) queue dropped in window-row-major order),
+    then accumulates each surviving event with K*K offset scatters — a
+    genuinely different computation from both the Pallas kernel (in-VMEM
+    queue walk) and the XLA path (masked raster + one conv).
+    """
+    N, C_in, K2, P = occ.shape
+    C_out = weights.shape[-1]
+    pad = K // 2
+
+    fired = occ > 0
+    slot = jnp.cumsum(fired.astype(jnp.int32), axis=-1) - 1
+    fired = fired & (slot < depth)
+
+    pos = jnp.arange(P, dtype=jnp.int32)
+    wy, wx = pos // n_win, pos % n_win                     # (P,)
+    ph = jnp.arange(K2, dtype=jnp.int32)[:, None]
+    y = wy[None, :] * K + ph // K                          # (K2, P)
+    x = wx[None, :] * K + ph % K
+
+    out = jnp.zeros((N, H, W, C_out), weights.dtype)
+    nidx = jnp.broadcast_to(jnp.arange(N)[:, None, None, None], fired.shape)
+    cidx = jnp.broadcast_to(jnp.arange(C_in)[None, :, None, None], fired.shape)
+    yb = jnp.broadcast_to(y[None, None], fired.shape)
+    xb = jnp.broadcast_to(x[None, None], fired.shape)
+    nf, cf, yf, xf, ff = (a.reshape(-1) for a in (nidx, cidx, yb, xb, fired))
+    for dy in range(K):
+        for dx in range(K):
+            ty = yf - dy + pad
+            tx = xf - dx + pad
+            ok = ff & (ty >= 0) & (ty < H) & (tx >= 0) & (tx < W)
+            contrib = weights[dy, dx][cf] * ok[:, None].astype(weights.dtype)
+            out = out.at[
+                nf, jnp.clip(ty, 0, H - 1), jnp.clip(tx, 0, W - 1), :
+            ].add(contrib, mode="promise_in_bounds")
+    return out
+
+
 def quant_matmul_ref(a_q, b_q, a_scale, b_scale):
     """Oracle for kernels.quant_matmul: exact int32 product, fp32 dequant."""
     prod = jnp.matmul(

@@ -1,0 +1,245 @@
+"""Fused, batch-native Pallas spike pipeline: compaction + accumulation.
+
+PR 1 split the event path into two kernels with an HBM round-trip between
+them: ``spike_compact`` (Thresholding Unit encoder: occupancy -> packed AE
+words) and ``event_accum`` (queue words -> membrane charge). DeepFire2
+(arXiv 2305.05187) and Gerlinghoff et al. (arXiv 2206.02495) both get their
+wins from *not* doing that — the event stream stays on-chip between the
+encoder and the accumulator. This module is that fusion:
+
+    per-phase occupancy ──compact──▶ AE words in VMEM ──accumulate──▶ charge
+                          (never leaves the chip)
+
+Design points (vs. the unfused kernels):
+
+- **Batch axis in the kernel grid.** The grid is ``(N, C_in)`` where
+  ``N = B * T`` — every (sample, time-step) segment is an independent grid
+  row. Queue backends previously reached batch > 1 only through an outer
+  ``jax.vmap`` of the whole single-sample program.
+- **Double-buffered fixed-depth segments.** The queue depth ``D`` is split
+  into segments of ``seg`` words held in a ``(2, K², seg)`` VMEM scratch:
+  while segment ``s`` drains into the membrane map, segment ``s+1`` is
+  compacted into the other buffer — the paper's Fig. 3 segmented AEQ as a
+  software pipeline. The packed words never materialize in HBM.
+- **Same drop semantics as ``core.aeq.compact_spikes``.** Events beyond
+  ``depth`` per (channel, phase) queue are dropped in window-row-major
+  order, so overflow counts and the surviving event set are bit-identical
+  to the unfused AEQ model.
+
+Three interchangeable implementations (differentially tested):
+
+- :func:`fused_spike_accum_pallas` — the Pallas TPU kernel described above.
+- :func:`fused_spike_accum_xla`    — the same semantics as one fused XLA
+  program: drop-mask the occupancy, rebuild the surviving 0/1 spike map,
+  and accumulate with a single batched SAME conv (event accumulation of a
+  spike raster == dense convolution of it). This is the **non-interpret
+  default off-TPU** — the engine's ``queue_pallas`` backend never runs the
+  Python-loop Pallas interpreter on its hot path.
+- ``ref.fused_spike_accum_ref``    — pure-jnp oracle in ``kernels/ref.py``.
+
+Inputs/outputs (all impls):
+
+    occ     (N, C_in, K², P) int32   per-phase window occupancy (0/1); P =
+                                     n_win² window positions, row-major
+    weights (K, K, C_in, C_out)
+    returns (N, H, W, C_out)         membrane charge ("currents") of the
+                                     surviving events
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch spaces; absent on some CPU-only builds
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - environment without pallas-tpu
+    pltpu = None
+
+
+def _default_seg(depth: int, n_win: int) -> int:
+    """Segment length: <= depth, <= the max events a phase can hold (P)."""
+    return max(1, min(64, depth, n_win * n_win))
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(occ_ref, w_ref, cur_ref, buf_ref, *,
+            K, n_win, bits, depth, seg, H, W, invalid):
+    """One grid step: all events of one (sample*step, channel) queue set."""
+    K2 = K * K
+    P = n_win * n_win
+    pad = K // 2
+    mask = (1 << bits) - 1
+    n_seg = -(-min(depth, P) // seg)  # ceil; slots beyond P never fill
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        cur_ref[...] = jnp.zeros_like(cur_ref)
+
+    occ = occ_ref[...]                                    # (K2, P)
+    fired_all = occ > 0
+    # per-phase totals, capped at depth: the drain-side liveness bound
+    # (identical to AEQ.counts for this segment set)
+    totals = jnp.minimum(fired_all.sum(axis=1), depth)    # (K2,)
+
+    def fill(s, bs):
+        """Compact events with queue slot in [s*seg, (s+1)*seg) into buf[bs].
+
+        Sequential append with a running per-phase count — the hardware
+        queue write pointer, exactly as in kernels/spike_compact.py, but
+        the destination is VMEM scratch instead of an HBM output.
+        """
+        base = s * seg
+        pl.store(buf_ref, (pl.ds(bs, 1), slice(None), slice(None)),
+                 jnp.full((1, K2, seg), invalid, jnp.int32))
+
+        def body(p, cnt):
+            col = pl.load(occ_ref, (slice(None), pl.ds(p, 1)))[:, 0]
+            fired = col > 0
+            wy = p // n_win
+            wx = p % n_win
+            word = (wy << bits) | wx
+            for ph in range(K2):  # static unroll: the K2 interlaced queues
+                sl = cnt[ph] - base
+
+                @pl.when(fired[ph] & (sl >= 0) & (sl < seg)
+                         & (cnt[ph] < depth))
+                def _append():
+                    pl.store(
+                        buf_ref,
+                        (pl.ds(bs, 1), pl.ds(ph, 1),
+                         pl.ds(jnp.clip(sl, 0, seg - 1), 1)),
+                        jnp.full((1, 1, 1), word, jnp.int32))
+            return cnt + fired.astype(jnp.int32)
+
+        jax.lax.fori_loop(0, P, body, jnp.zeros((K2,), jnp.int32))
+
+    def drain(s, bs):
+        """Accumulate segment ``s`` (resident in buf[bs]) into the charge map."""
+        base = s * seg
+
+        def dbody(d, _):
+            for ph in range(K2):  # static unroll: one event per phase, no
+                ky, kx = ph // K, ph % K  # write conflicts (interlacing)
+                word = pl.load(
+                    buf_ref, (pl.ds(bs, 1), pl.ds(ph, 1), pl.ds(d, 1))
+                )[0, 0, 0]
+                i_c = (word >> bits) & mask
+                j_c = word & mask
+                live = (base + d < totals[ph]) & (i_c < n_win)
+                y = i_c * K + ky
+                x = j_c * K + kx
+                for dy in range(K):  # static unroll: kernel offsets
+                    for dx in range(K):
+                        ty = y - dy + pad
+                        tx = x - dx + pad
+                        ok = live & (ty >= 0) & (ty < H) & (tx >= 0) & (tx < W)
+                        tyc = jnp.clip(ty, 0, H - 1)
+                        txc = jnp.clip(tx, 0, W - 1)
+                        cur = pl.load(cur_ref, (tyc, txc, slice(None)))
+                        wv = w_ref[dy, dx, :]
+                        pl.store(cur_ref, (tyc, txc, slice(None)),
+                                 cur + jnp.where(ok, wv, jnp.zeros_like(wv)))
+            return 0
+
+        jax.lax.fori_loop(0, seg, dbody, 0)
+
+    # software pipeline over double-buffered segments: compact s+1 while s
+    # drains (on hardware the fill is the encoder writing ahead of the
+    # accumulator; sequentialized here, the structure is what lowers)
+    fill(0, 0)
+
+    def sbody(s, _):
+        bs = jax.lax.rem(s, 2)
+
+        @pl.when(s + 1 < n_seg)
+        def _prefetch():
+            fill(s + 1, jax.lax.rem(s + 1, 2))
+
+        drain(s, bs)
+        return 0
+
+    jax.lax.fori_loop(0, n_seg, sbody, 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "K", "n_win", "bits", "depth", "seg", "H", "W", "invalid", "interpret"))
+def fused_spike_accum_pallas(
+    occ: jnp.ndarray,      # (N, C_in, K2, P) int32 occupancy
+    weights: jnp.ndarray,  # (K, K, C_in, C_out)
+    *,
+    K: int,
+    n_win: int,
+    bits: int,
+    depth: int,
+    H: int,
+    W: int,
+    invalid: int,
+    seg: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused compact+accumulate, grid (N, C_in) with N = batch * time."""
+    N, C_in, K2, P = occ.shape
+    C_out = weights.shape[-1]
+    seg = _default_seg(depth, n_win) if seg is None else min(seg, depth)
+
+    if pltpu is None:  # pragma: no cover - pallas-tpu unavailable
+        raise RuntimeError("pallas TPU support unavailable")
+    scratch = [pltpu.VMEM((2, K2, seg), jnp.int32)]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, K=K, n_win=n_win, bits=bits, depth=depth,
+                          seg=seg, H=H, W=W, invalid=invalid),
+        grid=(N, C_in),
+        in_specs=[
+            pl.BlockSpec((None, None, K2, P), lambda n, c: (n, c, 0, 0)),
+            pl.BlockSpec((K, K, None, C_out), lambda n, c: (0, 0, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, H, W, C_out), lambda n, c: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, H, W, C_out), weights.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(occ, weights)
+
+
+# ---------------------------------------------------------------------------
+# Compiled XLA realization (the non-interpret default off-TPU)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("K", "n_win", "depth", "H", "W"))
+def fused_spike_accum_xla(
+    occ: jnp.ndarray,      # (N, C_in, K2, P) int32 occupancy
+    weights: jnp.ndarray,  # (K, K, C_in, C_out)
+    *,
+    K: int,
+    n_win: int,
+    depth: int,
+    H: int,
+    W: int,
+) -> jnp.ndarray:
+    """Identical semantics as one fused XLA program (batched SAME conv).
+
+    Drops over-depth events exactly like ``compact_spikes`` (window-row-major
+    per (channel, phase) queue), rebuilds the surviving 0/1 spike map, and
+    accumulates it with a single conv over the fused (batch*time) axis —
+    event-driven accumulation of a spike raster is dense convolution of it.
+    When ``depth >= P`` no queue can ever overflow and the drop mask is
+    statically elided: the fused path then costs exactly one batched conv.
+    """
+    N, C_in, K2, P = occ.shape
+    fired = occ > 0
+    if depth < P:
+        slot = jnp.cumsum(fired.astype(jnp.int32), axis=-1) - 1
+        fired = fired & (slot < depth)
+    # inverse phase split: (N, C, ky, kx, wy, wx) -> (N, y, x, C)
+    m = fired.reshape(N, C_in, K, K, n_win, n_win).astype(weights.dtype)
+    m = m.transpose(0, 4, 2, 5, 3, 1).reshape(N, n_win * K, n_win * K, C_in)
+    m = m[:, :H, :W, :]
+    return jax.lax.conv_general_dilated(
+        m, weights, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

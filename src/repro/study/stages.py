@@ -186,6 +186,13 @@ def collect(spec: StudySpec, converted: ConvertArtifact | None = None, *,
     stored event), never which events exist or what the membrane computes,
     so the recorded integer stats are bit-identical across pricing variants
     (pinned by the repricing golden test).
+
+    Execution goes through ``engine.infer_batch``, so a backend with a
+    native batched plan runs it here automatically: ``queue_pallas`` studies
+    execute the fused spike pipeline with the batch axis in the kernel grid
+    (one compiled program per eval batch), not an outer per-sample vmap —
+    with logits/stats pinned bit-identical to the vmapped reference by
+    ``tests/test_engine.py``.
     """
     cache = cache or DEFAULT_CACHE
     if converted is None:

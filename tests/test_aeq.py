@@ -62,3 +62,51 @@ def test_aeq_from_raster_segments():
         for c in range(2):
             assert int(q.counts[t, c].sum()) == int(raster[t, c].sum())
     assert int(aeq.aeq_total_events(q)) == int(raster.sum())
+
+
+def test_aeq_from_raster_batch_and_batched_decode():
+    """Batched queue build == per-sample builds, and decode_positions
+    broadcasts over the (B, T, C) leading axes without an outer vmap."""
+    fmt = encoding.make_format(12, 3)
+    rng = np.random.default_rng(1)
+    raster = (rng.random((3, 2, 2, 12, 12)) < 0.25).astype(np.float32)
+    qb = aeq.aeq_from_raster_batch(fmt, jnp.asarray(raster), depth=16)
+    assert qb.words.shape == (3, 2, 2, 9, 16)
+    assert qb.overflow.shape == (3,)
+
+    yb, xb, vb = aeq.decode_positions(fmt, qb.words)   # (B, T, C, K2, D)
+    for b in range(3):
+        q1 = aeq.aeq_from_raster(fmt, jnp.asarray(raster[b]), depth=16)
+        np.testing.assert_array_equal(np.asarray(qb.words[b]),
+                                      np.asarray(q1.words))
+        np.testing.assert_array_equal(np.asarray(qb.counts[b]),
+                                      np.asarray(q1.counts))
+        y1, x1, v1 = aeq.decode_positions(fmt, q1.words)
+        np.testing.assert_array_equal(np.asarray(yb[b]), np.asarray(y1))
+        np.testing.assert_array_equal(np.asarray(xb[b]), np.asarray(x1))
+        np.testing.assert_array_equal(np.asarray(vb[b]), np.asarray(v1))
+
+
+def test_phase_occupancy_matches_phase_split():
+    """The batched occupancy helper == the word-level _phase_split model,
+    and span_map's per-position add counts match the dense offsets map."""
+    fmt = encoding.make_format(10, 3)  # non-compressed fallback geometry
+    rng = np.random.default_rng(2)
+    raster = (rng.random((2, 3, 10, 10, 2)) < 0.3).astype(np.float32)
+    occ = aeq.phase_occupancy(fmt, jnp.asarray(raster))  # (B, T, C, K2, P)
+    assert occ.shape == (2, 3, 2, 9, fmt.n_win ** 2)
+    for b in range(2):
+        for t in range(3):
+            for c in range(2):
+                want = aeq._phase_split(fmt, jnp.asarray(raster[b, t, :, :, c]))
+                np.testing.assert_array_equal(np.asarray(occ[b, t, c]),
+                                              np.asarray(want))
+
+    # keep mask: capped in window-row-major order, exactly compact_spikes
+    depth = 2
+    keep = aeq.segment_keep(occ, depth)
+    assert int((keep.sum(-1) <= depth).all())
+    words, counts, dropped = aeq.compact_spikes(
+        fmt, jnp.asarray(raster[0, 0, :, :, 0]), depth)
+    np.testing.assert_array_equal(
+        np.asarray(keep[0, 0, 0].sum(-1)), np.asarray(counts))

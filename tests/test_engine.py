@@ -4,6 +4,9 @@ The structural guarantee this file pins down: ``snn_infer`` (queue backend)
 and ``snn_dense_infer`` (scanned dense backend) are two backends of ONE
 engine, so logits agree to float tolerance and every SNNStats field agrees
 exactly — across all registered neuron modes and both input encodings.
+The fused batch-native queue pipeline (``queue_pallas`` +
+``kernels/spike_pipeline``) additionally pins *bit-exact* logits/stats
+against both references at B in {1, 3, 16}, including the overflow regime.
 """
 import jax
 import jax.numpy as jnp
@@ -71,7 +74,7 @@ def test_scan_equals_unrolled(net, make_snn_config):
 
 
 def test_pallas_queue_backend_matches_dense(make_snn_config):
-    """The kernels/event_accum Pallas path is a drop-in queue accumulator."""
+    """The fused kernels/spike_pipeline path is a drop-in queue accumulator."""
     spec = "4C3-6"
     params = snn_model.init_params(jax.random.PRNGKey(3), spec, 6, 1)
     th = [jnp.asarray(0.4)] * 2
@@ -83,6 +86,92 @@ def test_pallas_queue_backend_matches_dense(make_snn_config):
     np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
                                atol=1e-4, rtol=1e-4)
     _stats_equal(sp, sd)
+
+
+def test_pallas_backend_is_batch_native_and_non_interpret():
+    """The fused queue pipeline: batched plan, never the Pallas interpreter."""
+    from repro.kernels import ops
+
+    assert engine.get_backend("queue_pallas").supports_batch is True
+    assert engine.get_backend("queue").supports_batch is False
+    # default impl is compiled on every platform (xla off-TPU, pallas on TPU)
+    assert ops.default_spike_impl() in ("xla", "pallas")
+
+
+@pytest.mark.parametrize("B", [1, 3, 16])  # 3, 16: non-divisible + lane-wide
+def test_fused_batched_queue_parity(net, make_snn_config, B):
+    """infer_batch(queue_pallas) == per-sample dense AND queue, bit-exact.
+
+    The batched plan (batch axis in the kernel grid) must be a pure
+    performance change: logits and every SNNStats field identical to both
+    the dense oracle and the word-level queue reference, sample by sample.
+    """
+    params, th, img = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, mode="mttfs_cont",
+                          input_mode="binary")
+    rng = np.random.default_rng(B)
+    imgs = jnp.asarray(rng.random((B, HW, HW, C)), jnp.float32)
+
+    lb, sb = engine.infer_batch(params, th, cfg, imgs, backend="queue_pallas")
+    for i in range(B):
+        for ref_backend in ("dense", "queue"):
+            lr, sr = engine.infer(params, th, cfg, imgs[i],
+                                  backend=ref_backend)
+            np.testing.assert_array_equal(
+                np.asarray(lb[i]), np.asarray(lr),
+                err_msg=f"logits sample {i} vs {ref_backend}")
+            _stats_equal(
+                SNNStatsView(sb, i), sr,
+                msg=f"sample {i} vs {ref_backend}")
+
+
+class SNNStatsView:
+    """One sample's slice of batched SNNStats (duck-typed for _stats_equal)."""
+
+    def __init__(self, stats, i):
+        self.events_in = stats.events_in[i]
+        self.spikes_out = stats.spikes_out[i]
+        self.add_ops = stats.add_ops[i]
+        self.queue_words = stats.queue_words[i]
+        self.overflow = stats.overflow[i]
+
+
+@pytest.mark.parametrize("mode", neuron.MODES)
+@pytest.mark.parametrize("input_mode", ["analog", "binary"])
+def test_fused_batched_all_modes_encodings(net, make_snn_config, mode,
+                                           input_mode):
+    """The fused plan holds parity across every neuron mode x encoding."""
+    params, th, img = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, mode=mode, input_mode=input_mode)
+    imgs = jnp.stack([img, img * 0.6, img * 0.2])
+
+    lb, sb = engine.infer_batch(params, th, cfg, imgs, backend="queue_pallas")
+    ld, sd = engine.infer_batch(params, th, cfg, imgs, backend="dense")
+    np.testing.assert_array_equal(np.asarray(lb), np.asarray(ld),
+                                  err_msg=f"{mode}/{input_mode}")
+    _stats_equal(sb, sd, msg=f"{mode}/{input_mode}")
+
+
+def test_fused_overflow_stats_match_queue(net, make_snn_config):
+    """Small queue depth: drops happen, and the fused path drops the SAME
+    events as the word-level queues — overflow, events, ops, and logits all
+    stay bit-identical (the drop rule is part of the AEQ contract).
+
+    (dense is no oracle here: it counts *uncapped* events and processes
+    dropped ones, which is exactly why this regression test pins vs queue.)
+    """
+    params, th, img = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, depth=2, mode="mttfs_cont",
+                          input_mode="binary")
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.random((3, HW, HW, C)), jnp.float32)
+
+    lb, sb = engine.infer_batch(params, th, cfg, imgs, backend="queue_pallas")
+    assert int(np.asarray(sb.overflow).min()) > 0  # the regime is exercised
+    for i in range(3):
+        lq, sq = engine.infer(params, th, cfg, imgs[i], backend="queue")
+        np.testing.assert_array_equal(np.asarray(lb[i]), np.asarray(lq))
+        _stats_equal(SNNStatsView(sb, i), sq, msg=f"overflow sample {i}")
 
 
 def test_batch_infer_matches_per_sample(net, make_snn_config):
