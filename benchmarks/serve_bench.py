@@ -1,0 +1,89 @@
+"""Serving-runtime benchmarks: bucketed batching throughput + metering parity.
+
+The acceptance row for ``repro.serve``: a closed-loop run of >= 256 requests
+through the ``queue_pallas`` backend must sustain higher throughput with
+dynamic bucketing than per-request B=1 submission, and the per-request
+energy meters must sum bit-exactly to a one-shot ``collect`` + price over
+the same inputs.
+
+Timing is interleaved min-of-N over whole load-generator runs (the build
+box is load-noisy; interleaving subjects both disciplines to the same
+transient load, min is the noise-robust estimator). The served model is the
+paper's MNIST net via the shared benchmark study cache — trained weights,
+the same artifacts a study over this spec executes.
+"""
+from __future__ import annotations
+
+from .common import emit, study_cache
+
+
+def serve_bench():
+    from repro.serve import bench as sb
+    from repro.study import StudySpec
+
+    spec = StudySpec(dataset="mnist", depth=64, mode="mttfs_cont",
+                     backend="queue_pallas", batch=64)
+    cache = study_cache()
+    n = 256
+    buckets = (1, 4, 16)
+    images = sb.request_images(spec, n)
+
+    def make_runtime(ladder):
+        # the CLI bench's own construction path: register_study (cached
+        # train -> convert through the shared benchmark cache) + warmup
+        runtime, model = sb.build_runtime(spec, ladder, trained=True,
+                                          cache=cache)
+        return runtime, model
+
+    runs = {"bucketed": lambda: sb.closed_loop(*make_runtime(buckets),
+                                               images),
+            "per_request_b1": lambda: sb.closed_loop(*make_runtime((1,)),
+                                                     images)}
+
+    best = {}
+    for _ in range(3):                    # interleaved min-of-N, keyed on
+        for name, fn in runs.items():     # the measured serving wall (the
+            result = fn()                 # runtime build/warmup is outside
+            if name not in best or result.wall_s < best[name].wall_s:
+                best[name] = result
+
+    bucketed, b1 = best["bucketed"], best["per_request_b1"]
+    for name, r in (("bucketed", bucketed), ("per_request_b1", b1)):
+        hist = "/".join(f"{b}x{c}" for b, c in sorted(
+            r.bucket_histogram.items()))     # bucket x batch-count pairs
+        emit(f"serve/closed_{name}", r.wall_s / n * 1e6,
+             f"requests={n};backend={spec.backend};"
+             f"throughput_rps={r.throughput_rps:.1f};"
+             f"p50_ms={r.latency_p50_s * 1e3:.1f};"
+             f"p99_ms={r.latency_p99_s * 1e3:.1f};"
+             f"buckets={hist}")
+    emit("serve/bucketing_speedup", 0.0,
+         f"throughput_x={bucketed.throughput_rps / b1.throughput_rps:.2f};"
+         f"requests={n};buckets={'/'.join(map(str, buckets))}")
+
+    # metering parity: served per-request energies vs one-shot collect+price
+    rt, model = make_runtime(buckets)
+    responses = sb.closed_loop(rt, model, images).responses
+    parity = sb.verify_energy_parity(spec, rt, model, images, responses)
+    emit("serve/energy_parity", 0.0,
+         f"elementwise_bitexact={int(parity['elementwise_bitexact'])};"
+         f"sum_bitexact={int(parity['sum_bitexact'])};"
+         f"served_sum_j={parity['served_sum_j']:.6e};"
+         f"one_shot_sum_j={parity['one_shot_sum_j']:.6e}")
+
+    # open loop: latency under partial load (virtual-clock Poisson arrivals)
+    rate = bucketed.throughput_rps / 4
+    opened = sb.open_loop(*make_runtime(buckets), images, rate_rps=rate)
+    emit("serve/open_loop", opened.wall_s / n * 1e6,
+         f"rate_rps={rate:.0f};requests={n};"
+         f"throughput_rps={opened.throughput_rps:.1f};"
+         f"p50_ms={opened.latency_p50_s * 1e3:.1f};"
+         f"p99_ms={opened.latency_p99_s * 1e3:.1f}")
+
+    if not (parity["elementwise_bitexact"] and parity["sum_bitexact"]):
+        raise AssertionError(
+            "serving energy meters diverged from one-shot collect+price: "
+            f"{parity}")
+
+
+ALL = [serve_bench]

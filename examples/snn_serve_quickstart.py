@@ -1,0 +1,75 @@
+"""Serve an SNN: submit requests, get per-request latency + energy back.
+
+The serving analogue of ``quickstart.py``: train + convert the paper's
+MNIST net through the study stages, register it in a
+:class:`~repro.serve.ModelRegistry`, warm the bucket ladder, then submit a
+handful of requests through the :class:`~repro.serve.ServeRuntime` and
+print what every response carries — the prediction, the serving latency,
+and the energy-model estimate priced from that request's own recorded
+spike statistics (see docs/SERVING.md and docs/ENERGY_MODEL.md).
+
+    PYTHONPATH=src python examples/snn_serve_quickstart.py [--quick]
+
+``--quick`` (the CI smoke mode) trims the training recipe — this example
+demonstrates the serving path, not the accuracy claims (those live in
+``quickstart.py``, which keeps the full recipe).
+"""
+import argparse
+import time
+
+from repro.data.synthetic import DATASETS
+from repro.serve import BucketPolicy, ModelRegistry, ServeRuntime
+from repro.study import StudySpec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: short training, fewer requests")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--backend", default="queue_pallas")
+    args = ap.parse_args()
+
+    spec = StudySpec(
+        dataset="mnist",
+        epochs=2 if args.quick else 6,
+        n_train=512 if args.quick else 2048,
+        depth=64, mode="mttfs_cont", backend=args.backend,
+        balance=not args.quick,
+    )
+    buckets = (1, 4, 16)
+    n = 8 if args.quick else args.requests
+
+    print(f"model: {spec.net} on backend={spec.backend}")
+    t0 = time.time()
+    registry = ModelRegistry()
+    handle = registry.register_study("mnist", spec)
+    print(f"trained + converted in {time.time() - t0:.0f}s")
+
+    t0 = time.time()
+    handle.warmup(buckets)
+    print(f"warmed buckets {buckets} in {time.time() - t0:.1f}s "
+          f"(compiled plans: {handle.cached_buckets()})")
+
+    runtime = ServeRuntime(registry, BucketPolicy(buckets))
+    images, labels = DATASETS["mnist"](n, seed=2026)
+    for img in images:
+        runtime.submit(img, "mnist")
+    responses = sorted(runtime.run_until_drained(), key=lambda r: r.rid)
+
+    print(f"\n  rid  label  pred  bucket  latency_ms  energy_uJ  model_lat_us")
+    correct = 0
+    for r, label in zip(responses, labels):
+        correct += r.pred == label
+        print(f"  {r.rid:3d}  {label:5d}  {r.pred:4d}  {r.bucket:6d}  "
+              f"{r.latency_s * 1e3:10.2f}  {r.energy_j * 1e6:9.3f}  "
+              f"{r.model_latency_s * 1e6:12.2f}")
+
+    total_j = sum(r.energy_j for r in responses)
+    print(f"\nserved {n} requests: accuracy {correct / n:.2f}, "
+          f"total energy {total_j * 1e6:.1f} uJ")
+    print(f"runtime counters: {runtime.stats_summary()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,9 @@ units. This module is the software mirror of that structure:
 
 Entry points ``infer`` / ``infer_batch`` are jit-compiled once per
 (config, backend, batched) triple and cached; ``snn_model.snn_infer`` /
-``snn_dense_infer`` are thin wrappers over them.
+``snn_dense_infer`` are thin wrappers over them. ``infer_batch_masked``
+is the padded-bucket entry the serving runtime (``repro.serve``) uses —
+see the mask contract on ``infer_batch``.
 """
 from __future__ import annotations
 
@@ -785,8 +787,61 @@ def infer_batch(params, thresholds, cfg: SNNConfig, images, *,
     Backends with a native batched plan (``queue_pallas``) execute it here —
     batch axis in the kernel grid; everything else is vmapped. Either way
     stats come back with a leading per-sample axis.
+
+    **Mask contract** (what ``repro.serve``'s padded buckets rely on): the
+    batch axis is sample-independent in every backend — convs batch over B,
+    the time loop is vmapped/batched per sample, and the fused queue kernel
+    grids index (b, t) pairs independently — so row ``i`` of a batch is
+    bit-identical no matter which (or how many) other samples share the
+    batch. Padding a batch with junk rows and slicing the valid prefix
+    (:func:`infer_batch_masked`) therefore equals the unpadded call exactly,
+    logits AND stats; ``tests/test_serving.py`` pins this per bucket size.
     """
     return _runner(cfg, backend, True)(params, tuple(thresholds), images)
+
+
+def batch_runner(cfg: SNNConfig, backend: str = "dense"):
+    """The cached jit executable behind :func:`infer_batch`.
+
+    Exposed so callers that manage their own compiled-plan caches
+    (``repro.serve.registry`` AOT-lowers one executable per padded bucket
+    size) can reach the exact program ``infer_batch`` would run.
+    """
+    return _runner(cfg, backend, True)
+
+
+def _check_n_valid(n_valid, B: int) -> None:
+    if not isinstance(n_valid, int) or not 0 < n_valid <= B:
+        raise ValueError(
+            f"n_valid must be an int in [1, {B}], got {n_valid!r}")
+
+
+def slice_valid(logits, stats, n_valid: int):
+    """Drop padded slots: keep the first ``n_valid`` rows of batched output.
+
+    ``n_valid`` must be a host-side int (the slice happens outside jit, so
+    bucketed callers never trigger a retrace).
+    """
+    _check_n_valid(n_valid, logits.shape[0])
+    if n_valid == logits.shape[0]:
+        return logits, stats
+    return logits[:n_valid], jax.tree.map(lambda a: a[:n_valid], stats)
+
+
+def infer_batch_masked(params, thresholds, cfg: SNNConfig, images, n_valid, *,
+                       backend: str = "dense"):
+    """Run a padded (B, H, W, C) bucket; return only the valid prefix.
+
+    The serving entry point: ``images`` is a power-of-two-sized bucket whose
+    first ``n_valid`` rows are real requests and whose tail is padding. Per
+    the mask contract on :func:`infer_batch`, the returned logits/stats are
+    bit-identical to an unpadded ``infer_batch`` over ``images[:n_valid]``
+    while hitting the (config, backend, B)-shaped jit cache of the bucket.
+    """
+    _check_n_valid(n_valid, images.shape[0])   # before spending the batch
+    logits, stats = infer_batch(params, thresholds, cfg, images,
+                                backend=backend)
+    return slice_valid(logits, stats, n_valid)
 
 
 register_backend("dense", DenseBackend())

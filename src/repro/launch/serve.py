@@ -1,7 +1,12 @@
-"""Serving launcher: batched generation with the continuous-batching engine.
+"""LM serving launcher: batched generation with the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
         --requests 8 --max-tokens 12
+
+.. note::
+   Template-era **language-model** path (``repro.serving.serve``). The SNN
+   serving runtime — the one that serves the paper's models — is
+   ``repro.serve`` (``python -m repro.serve.bench``; see docs/SERVING.md).
 """
 from __future__ import annotations
 

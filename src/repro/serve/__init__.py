@@ -1,0 +1,33 @@
+"""repro.serve — the SNN inference serving runtime.
+
+Turns the batch-native execution engine (``core/engine.py``) into a
+load-servable inference service:
+
+- :class:`~repro.serve.batching.BucketPolicy` — dynamic batching into
+  padded power-of-two buckets, so the per-(config, backend, B) compiled
+  plans are reused instead of recompiling per request;
+- :class:`~repro.serve.registry.ModelRegistry` — named models
+  (dataset spec × backend) with an LRU-bounded compiled-plan cache and
+  warmup;
+- :class:`~repro.serve.runtime.ServeRuntime` — the admission queue +
+  batcher + per-request energy metering (every response carries logits,
+  its own :class:`~repro.study.artifacts.StatsRecord` row, and the
+  energy/latency estimate priced via ``repro.study.price_record``);
+- ``repro.serve.bench`` — closed/open-loop load generation
+  (``python -m repro.serve.bench``).
+
+See ``docs/SERVING.md`` for architecture and policies. The older
+``repro.serving`` package is the template-era LM continuous-batching path
+and is unrelated to the SNN engine.
+"""
+from .api import InferRequest, InferResponse, ServeError  # noqa: F401
+from .batching import DEFAULT_BUCKETS, BucketPolicy  # noqa: F401
+from .registry import ModelHandle, ModelRegistry  # noqa: F401
+from .runtime import ServeRuntime  # noqa: F401
+
+__all__ = [
+    "InferRequest", "InferResponse", "ServeError",
+    "BucketPolicy", "DEFAULT_BUCKETS",
+    "ModelHandle", "ModelRegistry",
+    "ServeRuntime",
+]

@@ -1,0 +1,60 @@
+"""Request/response types and errors for the SNN serving runtime.
+
+A request is one (H, W, C) image bound for one registered model; a response
+carries everything the paper's per-sample methodology produces for it —
+logits, the argmax prediction, the raw (1, L)-row :class:`StatsRecord`
+accounting, and the energy/latency estimate priced from that row through
+the study pipeline's ``price_record`` path — plus the serving metadata
+(which padded bucket it rode in, how long it queued, how long the batch
+took). Nothing here touches jax; these are plain host-side values.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..study.artifacts import StatsRecord
+
+
+class ServeError(RuntimeError):
+    """A serving-layer failure (unknown model, bad request geometry, ...)."""
+
+
+@dataclasses.dataclass
+class InferRequest:
+    """One admitted inference request, waiting in (or taken from) the queue."""
+
+    rid: int
+    model: str
+    image: np.ndarray            # (H, W, C) float32, the model's geometry
+    arrival_s: float = 0.0       # clock time at submit (wall or virtual)
+
+
+@dataclasses.dataclass
+class InferResponse:
+    """The completed request: prediction + per-request accounting.
+
+    ``energy_j`` / ``model_latency_s`` come from pricing ``stats`` (this
+    request's row, sliced out of the bucket's batched SNNStats) through
+    ``repro.study.price_record`` — the same arithmetic the study pipeline's
+    price stage applies to a whole eval set, so per-request totals sum
+    bit-exactly to a one-shot collect+price over the same inputs.
+    """
+
+    rid: int
+    model: str
+    logits: np.ndarray           # (n_out,)
+    pred: int
+    stats: StatsRecord           # (1, L) rows — this request only
+    energy_j: float              # energy-model estimate for this request
+    model_latency_s: float       # energy-model latency (hardware estimate)
+    bucket: int                  # padded batch size the request rode in
+    batch_valid: int             # how many real requests shared that bucket
+    queue_wait_s: float          # admission -> batch launch
+    service_s: float             # the bucket's execute wall time
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end serving latency: queue wait + batch service."""
+        return self.queue_wait_s + self.service_s

@@ -1,0 +1,294 @@
+"""Load generator + serving benchmark for the SNN serving runtime.
+
+Two arrival disciplines over the same runtime:
+
+- **closed loop** — the whole request set is admitted up front (a saturated
+  backlog); measures steady-state throughput and how well the dynamic
+  batcher amortizes per-call overhead into large buckets.
+- **open loop** — Poisson arrivals at ``--rate`` req/s on a *virtual*
+  clock (service times are real measured wall times, arrival gaps are
+  simulated), so queueing latency under partial load is measurable without
+  sleeping through the experiment.
+
+Every run can verify the serving runtime's energy metering against a
+one-shot ``study.collect`` + ``price_record`` over the same inputs
+(``--verify``): per-request totals must sum bit-exactly.
+
+    PYTHONPATH=src python -m repro.serve.bench --requests 256 \
+        --backend queue_pallas --mode both [--trained] [--quick]
+
+By default the served model is an *untrained* paper-spec SNN (weights do
+not change serving cost structure; skipping training keeps the bench
+seconds-fast). ``--trained`` routes through the study pipeline's cached
+train → convert stages instead.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from .api import InferResponse
+from .batching import DEFAULT_BUCKETS, BucketPolicy
+from .registry import ModelRegistry
+from .runtime import ServeRuntime
+
+
+@dataclasses.dataclass
+class LoadResult:
+    """One load-generator run: throughput, latency percentiles, energy."""
+
+    mode: str                 # 'closed' | 'open'
+    n_requests: int
+    wall_s: float             # closed: real wall; open: virtual clock span
+    throughput_rps: float
+    latency_p50_s: float
+    latency_p90_s: float
+    latency_p99_s: float
+    energy_sum_j: float       # float32 pairwise sum over rid order
+    bucket_histogram: dict
+    responses: list           # InferResponse, rid order
+
+
+def _finish(mode, responses, wall_s, runtime) -> LoadResult:
+    responses = sorted(responses, key=lambda r: r.rid)
+    lats = np.asarray([r.latency_s for r in responses])
+    p50, p90, p99 = np.percentile(lats, [50, 90, 99])
+    return LoadResult(
+        mode=mode, n_requests=len(responses), wall_s=wall_s,
+        throughput_rps=len(responses) / wall_s if wall_s > 0 else float("inf"),
+        latency_p50_s=float(p50), latency_p90_s=float(p90),
+        latency_p99_s=float(p99),
+        energy_sum_j=float(np.sum(energy_array(responses))),
+        bucket_histogram=runtime.stats_summary()["bucket_histogram"],
+        responses=responses)
+
+
+def energy_array(responses: list[InferResponse]) -> np.ndarray:
+    """Per-request energies as float32 in rid order (the parity layout)."""
+    return np.asarray([r.energy_j for r in sorted(responses,
+                                                  key=lambda r: r.rid)],
+                      np.float32)
+
+
+def closed_loop(runtime: ServeRuntime, model: str, images) -> LoadResult:
+    """Admit everything, drain: saturated-backlog throughput."""
+    t0 = time.perf_counter()
+    for img in images:
+        runtime.submit(img, model)
+    responses = runtime.run_until_drained()
+    return _finish("closed", responses, time.perf_counter() - t0, runtime)
+
+
+def open_loop(runtime: ServeRuntime, model: str, images, *, rate_rps: float,
+              seed: int = 0) -> LoadResult:
+    """Poisson arrivals at ``rate_rps`` on a virtual clock.
+
+    Arrival gaps advance simulated time; each batch advances it by the
+    batch's *measured* service wall time. Latencies are therefore what a
+    wall-clock run would see, without spending idle gaps sleeping.
+    """
+    n = len(images)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n))
+    now, i, responses = 0.0, 0, []
+    while len(responses) < n:
+        if not runtime.pending() and i < n:
+            now = max(now, arrivals[i])           # idle: jump to next arrival
+        while i < n and arrivals[i] <= now:
+            runtime.submit(images[i], model, arrival_s=float(arrivals[i]))
+            i += 1
+        t0 = time.perf_counter()
+        batch = runtime.step(now=now)
+        now += time.perf_counter() - t0
+        responses.extend(batch)
+    return _finish("open", responses, now, runtime)
+
+
+# ---------------------------------------------------------------------------
+# Model + runtime construction
+# ---------------------------------------------------------------------------
+
+def serve_spec(dataset: str = "mnist", *, backend: str = "queue_pallas",
+               depth: int = 64, T: int = 4, batch: int = 64,
+               mode: str = "mttfs_cont"):
+    """The :class:`~repro.study.StudySpec` a bench-served model studies as."""
+    from ..study import StudySpec
+
+    return StudySpec(dataset=dataset, depth=depth, T=T, batch=batch,
+                     mode=mode, backend=backend)
+
+
+def build_runtime(spec, buckets=DEFAULT_BUCKETS, *, trained: bool = False,
+                  cache=None, init_seed: int = 0,
+                  warmup: bool = True) -> tuple[ServeRuntime, str]:
+    """Registry + runtime serving ``spec``'s model; returns (runtime, name).
+
+    ``trained=False`` serves freshly initialized weights with unit
+    thresholds — the serving *cost structure* (shapes, buckets, compiled
+    plans) is weight-independent, so load benches skip the training stages.
+    """
+    registry = ModelRegistry()
+    name = f"{spec.dataset}-{spec.backend}"
+    if trained:
+        handle = registry.register_study(name, spec, cache=cache)
+    else:
+        import jax
+
+        from ..core import snn_model
+
+        params = snn_model.init_params(
+            jax.random.PRNGKey(init_seed), spec.net, spec.input_hw,
+            spec.input_c)
+        th = [1.0] * len(snn_model.parse_spec(spec.net))
+        handle = registry.register(name, params, th, spec.snn_config(),
+                                   backend=spec.backend,
+                                   vmem_resident=spec.vmem_resident)
+    if warmup:
+        handle.warmup(buckets)
+    return ServeRuntime(registry, BucketPolicy(buckets)), name
+
+
+def request_images(spec, n: int, *, seed: int = 123) -> np.ndarray:
+    """``n`` procedural request images for ``spec``'s dataset."""
+    from ..data.synthetic import DATASETS
+
+    return DATASETS[spec.dataset](n, seed=seed)[0]
+
+
+def one_shot_energy(spec, runtime: ServeRuntime, model: str, images):
+    """Per-sample energies from a one-shot collect + price over ``images``.
+
+    Runs the study pipeline's collect stage against the *served* artifacts
+    (same params/thresholds/config/backend the runtime executes) and prices
+    the whole record at once with ``price_record`` — the reference the
+    per-request meters must sum to bit-exactly.
+    """
+    from ..study import StudyCache, stages
+    from ..study.artifacts import ConvertArtifact
+    from ..study.cache import content_key
+
+    handle = runtime.registry.get(model)
+    converted = ConvertArtifact(
+        handle.params, list(handle.thresholds),
+        content_key("serve-oneshot", handle.params,
+                    list(handle.thresholds)))
+    collected = stages.collect(spec, converted, images=images,
+                               cache=StudyCache())
+    e = stages.price_record(collected.stats, input_hw=spec.input_hw,
+                            compressed=spec.compressed,
+                            vmem_resident=handle.vmem_resident)
+    return np.asarray(e.total_j, np.float32)
+
+
+def verify_energy_parity(spec, runtime: ServeRuntime, model: str, images,
+                         responses) -> dict:
+    """Served-vs-one-shot energy check; exact element and sum equality."""
+    served = energy_array(responses)
+    ref = one_shot_energy(spec, runtime, model, images)
+    return {
+        "elementwise_bitexact": bool(np.array_equal(served, ref)),
+        "sum_bitexact": bool(np.float32(np.sum(served))
+                             == np.float32(np.sum(ref))),
+        "served_sum_j": float(np.sum(served)),
+        "one_shot_sum_j": float(np.sum(ref)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _print_result(tag: str, r: LoadResult) -> None:
+    print(f"  [{tag:>12s}] {r.n_requests} reqs in {r.wall_s:.3f}s -> "
+          f"{r.throughput_rps:8.1f} req/s | latency p50/p90/p99 = "
+          f"{r.latency_p50_s * 1e3:.1f}/{r.latency_p90_s * 1e3:.1f}/"
+          f"{r.latency_p99_s * 1e3:.1f} ms | energy "
+          f"{r.energy_sum_j * 1e6:.2f} uJ | buckets {r.bucket_histogram}")
+
+
+def main(argv=None) -> None:
+    from ..core.engine import available_backends
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--dataset", default="mnist",
+                    choices=("mnist", "svhn", "cifar10"))
+    ap.add_argument("--backend", default="queue_pallas",
+                    choices=available_backends())
+    ap.add_argument("--buckets", default="1,4,16,64",
+                    help="comma-separated bucket ladder")
+    ap.add_argument("--mode", default="both",
+                    choices=("closed", "open", "both"))
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate, req/s (0 = a quarter of "
+                         "the measured closed-loop throughput; note open-"
+                         "loop capacity is below the saturated closed-loop "
+                         "number because partial load forms smaller buckets)")
+    ap.add_argument("--depth", type=int, default=64)
+    ap.add_argument("--T", type=int, default=4)
+    ap.add_argument("--trained", action="store_true",
+                    help="serve the study pipeline's trained+converted SNN "
+                         "(slower; default serves untrained weights)")
+    ap.add_argument("--verify", action="store_true",
+                    help="check per-request energy sums bit-exactly against "
+                         "a one-shot collect+price over the same inputs")
+    ap.add_argument("--quick", action="store_true",
+                    help="32 requests (CI smoke)")
+    args = ap.parse_args(argv)
+
+    n = 32 if args.quick else args.requests
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    spec = serve_spec(args.dataset, backend=args.backend, depth=args.depth,
+                      T=args.T)
+    images = request_images(spec, n)
+
+    print(f"serving {spec.dataset} ({spec.net}) on backend={spec.backend}, "
+          f"buckets={buckets}, {n} requests")
+    runtime, name = build_runtime(spec, buckets, trained=args.trained)
+
+    closed = None
+    if args.mode in ("closed", "both"):
+        closed = closed_loop(runtime, name, images)
+        _print_result("closed", closed)
+        if args.verify:
+            parity = verify_energy_parity(spec, runtime, name, images,
+                                          closed.responses)
+            print(f"  energy parity vs one-shot collect+price: {parity}")
+            if not (parity["elementwise_bitexact"]
+                    and parity["sum_bitexact"]):
+                raise SystemExit(
+                    "FAIL: serving energy meters diverged from one-shot "
+                    f"collect+price: {parity}")
+
+        # the per-request baseline: same runtime machinery, bucket ladder (1,)
+        rt_b1, _ = build_runtime(spec, (1,), trained=args.trained)
+        b1 = closed_loop(rt_b1, name, images)
+        _print_result("closed B=1", b1)
+        print(f"  bucketing speedup: "
+              f"{b1.wall_s / closed.wall_s:.2f}x throughput")
+
+    if args.mode in ("open", "both"):
+        rate = args.rate
+        if rate <= 0:
+            rate = (closed.throughput_rps / 4 if closed is not None else 50.0)
+        rt_open, _ = build_runtime(spec, buckets, trained=args.trained)
+        opened = open_loop(rt_open, name, images, rate_rps=rate)
+        _print_result(f"open @{rate:.0f}/s", opened)
+        if args.verify and args.mode == "open":
+            # closed mode already verified above; open-only runs check the
+            # open-loop responses so --verify is never silently ignored
+            parity = verify_energy_parity(spec, rt_open, name, images,
+                                          opened.responses)
+            print(f"  energy parity vs one-shot collect+price: {parity}")
+            if not (parity["elementwise_bitexact"]
+                    and parity["sum_bitexact"]):
+                raise SystemExit(
+                    "FAIL: serving energy meters diverged from one-shot "
+                    f"collect+price: {parity}")
+
+
+if __name__ == "__main__":
+    main()

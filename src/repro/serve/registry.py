@@ -1,0 +1,159 @@
+"""Multi-model registry: named serving handles + compiled-plan caching.
+
+A :class:`ModelHandle` owns one servable SNN — converted params, per-layer
+thresholds, the engine :class:`~repro.core.snn_model.SNNConfig`, a backend
+name, and the pricing options its responses are metered under. Per padded
+bucket size it AOT-lowers the engine's batched executable
+(``engine.batch_runner(...).lower(...).compile()``) into an LRU-bounded
+compiled-plan cache, so serving never pays a trace after warmup and an
+abandoned bucket size eventually frees its executable.
+
+The :class:`ModelRegistry` LRU-bounds the handles themselves (a box serving
+MNIST/SVHN/CIFAR-10 × backend variants holds ``capacity`` models hot);
+``register_study`` builds a handle straight from the study pipeline's
+train → convert stages so a registered model is exactly the SNN a
+:class:`~repro.study.StudySpec` studies.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+
+from ..core import engine
+from .api import ServeError
+from .batching import DEFAULT_BUCKETS
+
+
+class ModelHandle:
+    """One servable model: artifacts + per-bucket compiled plans."""
+
+    def __init__(self, name: str, params, thresholds, cfg, *,
+                 backend: str = "queue_pallas", vmem_resident: bool = True,
+                 plan_cache_size: int = 8):
+        engine.get_backend(backend)          # fail fast on unknown names
+        if plan_cache_size < 1:
+            raise ValueError(                # 0 would recompile every batch
+                f"plan_cache_size must be >= 1, got {plan_cache_size}")
+        self.name = name
+        self.params = [{k: jnp.asarray(v) for k, v in layer.items()}
+                       for layer in params]
+        self.thresholds = tuple(jnp.asarray(t) for t in thresholds)
+        self.cfg = cfg
+        self.backend = backend
+        self.vmem_resident = vmem_resident
+        self.plan_cache_size = plan_cache_size
+        # bucket B -> compiled executable, insertion-ordered for LRU
+        self._plans: collections.OrderedDict = collections.OrderedDict()
+
+    def _image_struct(self, bucket: int):
+        cfg = self.cfg
+        return jax.ShapeDtypeStruct(
+            (bucket, cfg.input_hw, cfg.input_hw, cfg.input_c), jnp.float32)
+
+    def plan_for(self, bucket: int):
+        """The compiled batched executable for this bucket size (LRU-cached).
+
+        AOT lowering pins the full program — plan walk, backend, batch axis
+        in the kernel grid — at this exact (config, backend, B) shape; a
+        cache hit is a plain dict lookup. Eviction drops the least recently
+        used executable (jax frees it with the reference).
+        """
+        if bucket in self._plans:
+            self._plans.move_to_end(bucket)
+            return self._plans[bucket]
+        runner = engine.batch_runner(self.cfg, self.backend)
+        plan = runner.lower(self.params, self.thresholds,
+                            self._image_struct(bucket)).compile()
+        self._plans[bucket] = plan
+        while len(self._plans) > self.plan_cache_size:
+            self._plans.popitem(last=False)
+        return plan
+
+    def cached_buckets(self) -> tuple:
+        return tuple(self._plans)
+
+    def run_bucket(self, images, n_valid: int):
+        """Execute one padded bucket; return the valid prefix (see engine
+        mask contract). ``images`` is the already-padded (B, H, W, C) array."""
+        logits, stats = self.plan_for(images.shape[0])(
+            self.params, self.thresholds, jnp.asarray(images))
+        jax.block_until_ready(logits)
+        return engine.slice_valid(logits, stats, n_valid)
+
+    def warmup(self, buckets=DEFAULT_BUCKETS) -> None:
+        """Compile (and once-execute) each bucket so serving never traces.
+
+        The execute matters: it forces any lazily initialized backend state
+        and faults the executable's working set before the first request.
+        """
+        for b in buckets:
+            zeros = jnp.zeros((b, self.cfg.input_hw, self.cfg.input_hw,
+                               self.cfg.input_c), jnp.float32)
+            self.run_bucket(zeros, b)
+
+
+class ModelRegistry:
+    """Name -> :class:`ModelHandle`, LRU-bounded to ``capacity`` models."""
+
+    def __init__(self, capacity: int = 4, plan_cache_size: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if plan_cache_size < 1:
+            raise ValueError(
+                f"plan_cache_size must be >= 1, got {plan_cache_size}")
+        self.capacity = capacity
+        self.plan_cache_size = plan_cache_size
+        self._models: collections.OrderedDict = collections.OrderedDict()
+
+    def register(self, name: str, params, thresholds, cfg, *,
+                 backend: str = "queue_pallas",
+                 vmem_resident: bool = True) -> ModelHandle:
+        """Register converted artifacts under ``name`` (replaces any old)."""
+        handle = ModelHandle(name, params, thresholds, cfg, backend=backend,
+                             vmem_resident=vmem_resident,
+                             plan_cache_size=self.plan_cache_size)
+        self._models.pop(name, None)
+        self._models[name] = handle
+        while len(self._models) > self.capacity:
+            self._models.popitem(last=False)
+        return handle
+
+    def register_study(self, name: str, spec, *, cache=None,
+                       vmem_resident: bool | None = None) -> ModelHandle:
+        """Train + convert ``spec`` through the study stages, then register.
+
+        The served model is byte-identical to what ``study.collect`` would
+        execute for the same spec (same converted params, thresholds,
+        config, and backend), so serving-side energy metering and a study
+        over the same inputs price the same stats.
+        """
+        from ..study import stages
+
+        trained = stages.train(spec, cache=cache)
+        converted = stages.convert(spec, trained, cache=cache)
+        return self.register(
+            name, converted.snn_params, converted.thresholds,
+            spec.snn_config(), backend=spec.backend,
+            vmem_resident=(spec.vmem_resident if vmem_resident is None
+                           else vmem_resident))
+
+    def get(self, name: str) -> ModelHandle:
+        try:
+            handle = self._models[name]
+        except KeyError:
+            raise ServeError(
+                f"unknown model {name!r}; registered models: "
+                f"{sorted(self._models)}") from None
+        self._models.move_to_end(name)
+        return handle
+
+    def names(self) -> tuple:
+        return tuple(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def __len__(self) -> int:
+        return len(self._models)

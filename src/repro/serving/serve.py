@@ -1,4 +1,11 @@
-"""Batched serving runtime: continuous batching over a fixed-slot KV cache.
+"""Batched LM serving runtime: continuous batching over a fixed-slot KV cache.
+
+.. note::
+   This is the template-era **language-model** serving path (transformer
+   KV caches, token-by-token decode) and is unrelated to the SNN engine.
+   Serving the paper's SNN models — dynamic bucketed batching over
+   ``engine.infer_batch`` with per-request energy metering — lives in
+   ``repro.serve`` (see ``docs/SERVING.md``).
 
 Production pattern (vLLM-style, TPU-native static shapes):
 - a fixed number of *slots* (the serving batch dimension), each holding one

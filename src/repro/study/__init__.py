@@ -17,8 +17,8 @@ from .spec import (StudySpec, StudySpecError, UnknownBackendError,  # noqa: F401
                    UnknownDatasetError, UnknownInputModeError,
                    UnknownNeuronModeError)
 from .stages import (collect, convert, fit_cnn, from_params,  # noqa: F401
-                     price, reset_stage_counts, run, run_with_data,
-                     stage_counts, sweep, train)
+                     price, price_record, reset_stage_counts, run,
+                     run_with_data, stage_counts, sweep, train)
 
 __all__ = [
     "StudySpec", "StudySpecError", "UnknownDatasetError",
@@ -26,6 +26,7 @@ __all__ = [
     "StudyCache", "DEFAULT_CACHE", "content_key",
     "TrainArtifact", "ConvertArtifact", "CollectArtifact", "StatsRecord",
     "Report", "sweep_rows", "price_stats",
-    "train", "convert", "collect", "price", "run", "run_with_data", "sweep",
+    "train", "convert", "collect", "price", "price_record", "run",
+    "run_with_data", "sweep",
     "fit_cnn", "from_params", "stage_counts", "reset_stage_counts",
 ]

@@ -241,13 +241,31 @@ def collect(spec: StudySpec, converted: ConvertArtifact | None = None, *,
 # price
 # ---------------------------------------------------------------------------
 
+def price_record(record, *, input_hw: int, compressed: bool = True,
+                 vmem_resident: bool = True):
+    """Price a :class:`StatsRecord` (or any N-row slice of one) directly.
+
+    The SNN half of the ``price`` stage, factored out so callers holding a
+    record — the full eval-set record here, or a single request's (1, L)
+    row in ``repro.serve`` — price through ONE code path. Word format is
+    the kernel=3 AE format every paper net's first conv uses (what the
+    monolith always priced with — kept for exact parity), so pricing a
+    sliced row bit-equals the same row of a whole-record pricing.
+    Returns an :class:`~repro.core.energy.EnergyBreakdown`.
+    """
+    fmt = encoding.make_format(input_hw, 3, compressed=compressed)
+    return reprice(record, word_bytes=encoding.word_nbytes(fmt),
+                   vmem_resident=vmem_resident)
+
+
 def price(spec: StudySpec, collected: CollectArtifact,
           trained: TrainArtifact, labels) -> Report:
     """Price recorded stats under ``spec``'s pricing fields → :class:`Report`.
 
     Pure post-processing: the SNN side comes entirely from the record via
-    ``energy.reprice``; only the (cheap, static) CNN side is re-evaluated,
-    because ``weight_bits`` changes its quantized forward pass.
+    ``energy.reprice`` (through :func:`price_record`); only the (cheap,
+    static) CNN side is re-evaluated, because ``weight_bits`` changes its
+    quantized forward pass.
     """
     images = jnp.asarray(collected.images)
     labels = jnp.asarray(labels)
@@ -263,12 +281,10 @@ def price(spec: StudySpec, collected: CollectArtifact,
     e_cnn = cnn_energy(costs, bits=spec.weight_bits)
 
     # --- SNN side: reprice the record ---
-    # kernel=3 word format: every paper net's first conv is K=3 (and the
-    # monolith always priced with this format — kept for exact parity)
-    fmt = encoding.make_format(spec.input_hw, 3, compressed=spec.compressed)
-    wb = encoding.word_nbytes(fmt)
     record = collected.stats
-    e = reprice(record, word_bytes=wb, vmem_resident=spec.vmem_resident)
+    e = price_record(record, input_hw=spec.input_hw,
+                     compressed=spec.compressed,
+                     vmem_resident=spec.vmem_resident)
 
     snn_energy_j = np.asarray(e.total_j)
     snn_latency_s = np.asarray(e.latency_s)
