@@ -18,7 +18,10 @@ import time
 import jax
 import numpy as np
 
-CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+# overridable so CI can point the disk cache somewhere actions/cache can
+# persist (content-hash keys make a restored cache safe anywhere)
+CACHE = (os.environ.get("REPRO_BENCH_CACHE")
+         or os.path.join(os.path.dirname(__file__), "_cache"))
 
 _STUDY_CACHE = None
 

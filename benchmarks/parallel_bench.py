@@ -1,0 +1,111 @@
+"""Data-parallel rows: sharded batch throughput + the sweep orchestrator.
+
+Two suites (wired into ``benchmarks/run.py``):
+
+- ``snn_sharded_throughput_bench`` — ``infer_batch`` vs
+  ``parallel.infer_batch_sharded`` at the serving layer's biggest bucket
+  (B=64), dense and queue_pallas, interleaved min-of-N (this box swings
+  2-3×; min under interleaving is the noise-robust estimator). On a
+  single-device box the rows are emitted as skipped-with-reason — run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for real numbers.
+  NOTE: virtual host devices *split* one CPU's cores, so the sharded
+  timings here measure partitioning overhead, not real speedup — the row
+  exists to track that overhead; speedup needs real devices.
+
+- ``study_sweep_cells_bench`` — the sweep runner's per-cell overhead:
+  a 3-cell pricing sweep against the shared bench cache, executed then
+  resumed; the resume pass is pure checkpoint-loading (the number that
+  bounds how fast a killed grid gets back to where it died).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from .common import emit, study_cache
+
+
+def snn_sharded_throughput_bench():
+    import jax.numpy as jnp
+
+    from repro import parallel
+    from repro.core import engine, snn_model
+
+    if parallel.device_count() < 2:
+        emit("parallel/sharded_throughput", 0.0,
+             "skipped=single_device;hint=XLA_FLAGS="
+             "--xla_force_host_platform_device_count=4")
+        return
+
+    spec = "32C3-P2-32C3-P2-10"
+    params = snn_model.init_params(jax.random.PRNGKey(0), spec, 28, 1)
+    th = [jnp.asarray(1.0)] * len(snn_model.parse_spec(spec))
+    cfg = snn_model.SNNConfig(spec=spec, input_hw=28, input_c=1, T=4,
+                              depth=256, mode="mttfs_cont",
+                              input_mode="binary")
+    imgs = jnp.asarray(np.random.default_rng(5).random((64, 28, 28, 1)),
+                       jnp.float32)
+    mesh = parallel.data_mesh()
+
+    for backend in ("dense", "queue_pallas"):
+        fns = {
+            "single": lambda b=backend: engine.infer_batch(
+                params, th, cfg, imgs, backend=b),
+            "sharded": lambda b=backend: parallel.infer_batch_sharded(
+                params, th, cfg, imgs, backend=b, mesh=mesh),
+        }
+        mins = {}
+        for name, fn in fns.items():
+            jax.block_until_ready(fn())          # compile + first run
+            mins[name] = float("inf")
+        for _ in range(8):                       # interleaved: same load
+            for name, fn in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                mins[name] = min(mins[name], time.perf_counter() - t0)
+        emit(f"parallel/sharded_throughput_{backend}",
+             mins["sharded"] * 1e6,
+             f"single_us={mins['single'] * 1e6:.0f};"
+             f"sharded_vs_single={mins['single'] / mins['sharded']:.2f};"
+             f"devices={parallel.mesh_size(mesh)};B=64")
+
+
+def study_sweep_cells_bench():
+    from repro.study import StudySpec
+    from repro.study.sweep import run_sweep
+
+    base = StudySpec(dataset="mnist", net="6C3-P2-8", input_hw=28, input_c=1,
+                     n_train=256, epochs=2, n_eval=48, eval_seed=99,
+                     n_calib=64, T=3, depth=64, mode="mttfs_cont")
+    cells = [base.replace(compressed=c, vmem_resident=v)
+             for c, v in ((True, True), (True, False), (False, False))]
+    out = tempfile.mkdtemp(prefix="sweep_bench_")
+
+    t0 = time.perf_counter()
+    first = run_sweep(cells, out_dir=out, cache=study_cache(),
+                      log=lambda *_: None)
+    execute_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    resumed = run_sweep(cells, out_dir=out, cache=study_cache(),
+                        log=lambda *_: None)
+    resume_s = time.perf_counter() - t0
+
+    emit("study/sweep_cells",
+         execute_s / len(cells) * 1e6,
+         f"cells={len(cells)};executed={first['executed']};"
+         f"resume_us_per_cell={resume_s / len(cells) * 1e6:.0f};"
+         f"resumed={resumed['resumed']};"
+         f"report={'ok' if resumed['complete'] else 'incomplete'}")
+
+    for root, _, files in os.walk(out, topdown=False):
+        for f in files:
+            os.unlink(os.path.join(root, f))
+        os.rmdir(root)
+
+
+ALL = [snn_sharded_throughput_bench, study_sweep_cells_bench]

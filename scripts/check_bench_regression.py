@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Noise-aware perf-regression gate over two ``benchmarks/run.py --json``
+snapshots.
+
+    python scripts/check_bench_regression.py BASELINE.json NEW.json \
+        [--fail-ratio 5.0] [--warn-ratio 2.0] [--summary FILE]
+
+Compares ``us_per_call`` row by row (rows present in both snapshots with a
+nonzero timing; derived-metric-only rows are skipped). The thresholds are
+deliberately loose: CI boxes and the dev box both swing 2-3× between runs
+even under interleaved min-of-N timing, so anything below ``--warn-ratio``
+is noise, between warn and fail is a ⚠️ *warning* (visible, non-fatal), and
+only a > ``--fail-ratio`` (default 5×) slowdown exits non-zero. Rows present
+in only one snapshot are listed informationally — a vanished row usually
+means a bench was renamed or errored (error rows carry ``us_per_call=0``
+and are skipped with a note).
+
+``--summary FILE`` appends the markdown report (pass it
+``$GITHUB_STEP_SUMMARY`` in CI so the diff lands in the job summary page).
+The CI job running this is non-blocking (``continue-on-error``): the gate
+exists to make big regressions *loud*, not to flake PRs on a noisy box.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        snap = json.load(f)
+    if "rows" not in snap:
+        raise SystemExit(f"{path}: not a bench snapshot (no 'rows' key)")
+    return snap["rows"]
+
+
+def compare(base: dict, new: dict, warn_ratio: float, fail_ratio: float):
+    """-> (comparisons, regressions, warnings, skipped, only_one_side)."""
+    comparisons, regressions, warnings, skipped = [], [], [], []
+    for name in sorted(set(base) & set(new)):
+        b = float(base[name].get("us_per_call", 0.0))
+        n = float(new[name].get("us_per_call", 0.0))
+        if b <= 0.0 or n <= 0.0:
+            skipped.append((name, "untimed or error row"))
+            continue
+        ratio = n / b
+        comparisons.append((name, b, n, ratio))
+        if ratio > fail_ratio:
+            regressions.append((name, b, n, ratio))
+        elif ratio > warn_ratio:
+            warnings.append((name, b, n, ratio))
+    only = sorted((set(base) ^ set(new)))
+    only_one = [(name, "baseline only" if name in base else "new only")
+                for name in only]
+    return comparisons, regressions, warnings, skipped, only_one
+
+
+def markdown_report(args, comparisons, regressions, warnings, skipped,
+                    only_one) -> str:
+    lines = ["## Bench regression gate", "",
+             f"baseline `{args.baseline}` vs new `{args.new}` — "
+             f"{len(comparisons)} timed rows compared, gate at "
+             f">{args.fail_ratio:g}× (warn at >{args.warn_ratio:g}×; the box "
+             "is load-noisy, small ratios are weather)", ""]
+
+    def table(rows, title, mark):
+        out = [f"### {mark} {title}", "",
+               "| bench | baseline µs | new µs | ratio |", "|---|---|---|---|"]
+        out += [f"| {n} | {b:.1f} | {v:.1f} | {r:.2f}× |"
+                for n, b, v, r in rows]
+        return out + [""]
+
+    if regressions:
+        lines += table(regressions, "Regressions (gate failed)", "❌")
+    if warnings:
+        lines += table(warnings, "Above warn threshold (non-fatal)", "⚠️")
+    if not regressions and not warnings:
+        lines += ["✅ no row above the warn threshold", ""]
+    improved = [c for c in comparisons if c[3] < 1 / args.warn_ratio]
+    if improved:
+        lines += table(improved, "Improvements", "🏎️")
+    new_only = [n for n, side in only_one if side == "new only"]
+    base_only = [n for n, side in only_one if side == "baseline only"]
+    if new_only:
+        lines += ["### Rows not in the baseline (new benches?)", ""]
+        lines += [f"- `{n}`" for n in new_only] + [""]
+    if base_only:
+        # a CI snapshot is usually a --only subset of the full committed
+        # baseline, so baseline-only rows are expected — count, don't list
+        lines += [f"_{len(base_only)} baseline row(s) not in the new "
+                  "snapshot (expected when the new run used --only)_", ""]
+    if skipped:
+        lines += [f"_{len(skipped)} row(s) skipped (untimed/error)_", ""]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--fail-ratio", type=float, default=5.0,
+                    help="exit 1 when new/baseline exceeds this (default 5)")
+    ap.add_argument("--warn-ratio", type=float, default=2.0,
+                    help="report (but pass) above this (default 2)")
+    ap.add_argument("--summary", default="",
+                    help="append the markdown report to this file "
+                         "($GITHUB_STEP_SUMMARY in CI)")
+    args = ap.parse_args(argv)
+    if not 1.0 < args.warn_ratio <= args.fail_ratio:
+        ap.error("need 1 < warn-ratio <= fail-ratio")
+
+    comparisons, regressions, warnings, skipped, only_one = compare(
+        load_rows(args.baseline), load_rows(args.new),
+        args.warn_ratio, args.fail_ratio)
+    report = markdown_report(args, comparisons, regressions, warnings,
+                             skipped, only_one)
+    print(report)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(report + "\n")
+
+    if regressions:
+        print(f"FAIL: {len(regressions)} row(s) regressed more than "
+              f"{args.fail_ratio:g}x", file=sys.stderr)
+        return 1
+    print(f"ok: no regression above {args.fail_ratio:g}x "
+          f"({len(warnings)} warning(s))", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

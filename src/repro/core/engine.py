@@ -780,6 +780,15 @@ def infer(params, thresholds, cfg: SNNConfig, image, *,
     return _runner(cfg, backend, False)(params, tuple(thresholds), image)
 
 
+# Batch dispatch override, installed (and restored) by
+# ``repro.parallel.use_mesh``: when set, ``infer_batch`` routes through the
+# data-parallel sharded executor instead of the local cached runner. The
+# override MUST be bit-exact vs the local path (the mask contract makes the
+# sharded one so), which is why callers above the engine — the study collect
+# cache in particular — never need to know whether a mesh was active.
+_batch_dispatch = None
+
+
 def infer_batch(params, thresholds, cfg: SNNConfig, images, *,
                 backend: str = "dense"):
     """Run a (N, H, W, C) batch; returns batched (logits, stats).
@@ -796,7 +805,14 @@ def infer_batch(params, thresholds, cfg: SNNConfig, images, *,
     batch. Padding a batch with junk rows and slicing the valid prefix
     (:func:`infer_batch_masked`) therefore equals the unpadded call exactly,
     logits AND stats; ``tests/test_serving.py`` pins this per bucket size.
+    The same independence is what makes data-parallel sharding safe:
+    ``repro.parallel`` splits the batch axis over a device mesh bit-exactly,
+    and inside a ``parallel.use_mesh(mesh)`` block this function routes
+    through that sharded executor automatically.
     """
+    if _batch_dispatch is not None:
+        return _batch_dispatch(params, thresholds, cfg, images,
+                               backend=backend)
     return _runner(cfg, backend, True)(params, tuple(thresholds), images)
 
 

@@ -31,7 +31,7 @@ class ModelHandle:
 
     def __init__(self, name: str, params, thresholds, cfg, *,
                  backend: str = "queue_pallas", vmem_resident: bool = True,
-                 plan_cache_size: int = 8):
+                 plan_cache_size: int = 8, mesh=None):
         engine.get_backend(backend)          # fail fast on unknown names
         if plan_cache_size < 1:
             raise ValueError(                # 0 would recompile every batch
@@ -44,8 +44,36 @@ class ModelHandle:
         self.backend = backend
         self.vmem_resident = vmem_resident
         self.plan_cache_size = plan_cache_size
+        self.mesh = mesh                     # data mesh for divisible buckets
         # bucket B -> compiled executable, insertion-ordered for LRU
         self._plans: collections.OrderedDict = collections.OrderedDict()
+
+    def set_mesh(self, mesh) -> None:
+        """(Re)point this handle at a device mesh; drops compiled plans.
+
+        The cached executables are shape- *and* placement-specific, so a
+        mesh change invalidates them; the next ``plan_for`` recompiles
+        against the new placement. Results stay bit-exact either way (the
+        engine mask contract makes batch sharding inert), so flipping a
+        live handle between meshes never changes served numbers.
+        """
+        if mesh is not self.mesh:
+            self.mesh = mesh
+            self._plans.clear()
+
+    def _bucket_sharded(self, bucket: int) -> bool:
+        """Sharded plan iff a real mesh is set and the bucket divides it.
+
+        Small buckets that don't divide (B=1 on a 4-way mesh) stay on the
+        single-device plan — padding them up would buy no throughput; big
+        buckets (B=64) are where data parallelism pays.
+        """
+        if self.mesh is None:
+            return False
+        from .. import parallel
+
+        n = parallel.mesh_size(self.mesh)
+        return n > 1 and bucket % n == 0
 
     def _image_struct(self, bucket: int):
         cfg = self.cfg
@@ -59,11 +87,23 @@ class ModelHandle:
         in the kernel grid — at this exact (config, backend, B) shape; a
         cache hit is a plain dict lookup. Eviction drops the least recently
         used executable (jax frees it with the reference).
+
+        With a mesh set (:meth:`set_mesh`), buckets divisible by the mesh
+        size compile the *data-parallel* program instead
+        (``parallel.batch_runner_sharded``) — batch rows striped across
+        devices, results bit-exact vs the local plan — so the big buckets
+        (B=64) run sharded while B=1 stays on one device.
         """
         if bucket in self._plans:
             self._plans.move_to_end(bucket)
             return self._plans[bucket]
-        runner = engine.batch_runner(self.cfg, self.backend)
+        if self._bucket_sharded(bucket):
+            from .. import parallel
+
+            runner = parallel.batch_runner_sharded(self.cfg, self.backend,
+                                                   self.mesh)
+        else:
+            runner = engine.batch_runner(self.cfg, self.backend)
         plan = runner.lower(self.params, self.thresholds,
                             self._image_struct(bucket)).compile()
         self._plans[bucket] = plan
@@ -97,7 +137,8 @@ class ModelHandle:
 class ModelRegistry:
     """Name -> :class:`ModelHandle`, LRU-bounded to ``capacity`` models."""
 
-    def __init__(self, capacity: int = 4, plan_cache_size: int = 8):
+    def __init__(self, capacity: int = 4, plan_cache_size: int = 8,
+                 mesh=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if plan_cache_size < 1:
@@ -105,7 +146,19 @@ class ModelRegistry:
                 f"plan_cache_size must be >= 1, got {plan_cache_size}")
         self.capacity = capacity
         self.plan_cache_size = plan_cache_size
+        self.mesh = mesh
         self._models: collections.OrderedDict = collections.OrderedDict()
+
+    def set_mesh(self, mesh) -> None:
+        """Point the registry — and every registered handle — at ``mesh``.
+
+        Future registrations inherit it; existing handles drop their
+        compiled plans and recompile lazily against the new placement
+        (see :meth:`ModelHandle.set_mesh`).
+        """
+        self.mesh = mesh
+        for handle in self._models.values():
+            handle.set_mesh(mesh)
 
     def register(self, name: str, params, thresholds, cfg, *,
                  backend: str = "queue_pallas",
@@ -113,7 +166,8 @@ class ModelRegistry:
         """Register converted artifacts under ``name`` (replaces any old)."""
         handle = ModelHandle(name, params, thresholds, cfg, backend=backend,
                              vmem_resident=vmem_resident,
-                             plan_cache_size=self.plan_cache_size)
+                             plan_cache_size=self.plan_cache_size,
+                             mesh=self.mesh)
         self._models.pop(name, None)
         self._models[name] = handle
         while len(self._models) > self.capacity:

@@ -39,9 +39,15 @@ class ServeRuntime:
 
     def __init__(self, registry: ModelRegistry,
                  policy: BucketPolicy | None = None, *,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, mesh=None):
         self.registry = registry
         self.policy = policy or BucketPolicy()
+        if mesh is not None:
+            # data-parallel serving: registered models recompile their big
+            # buckets (divisible by the mesh) as sharded plans — see
+            # ModelHandle.plan_for. Bit-exact, so responses and energy
+            # metering are unchanged vs single-device serving.
+            registry.set_mesh(mesh)
         self.clock = clock
         self.queue: collections.deque[InferRequest] = collections.deque()
         self._next_rid = 0

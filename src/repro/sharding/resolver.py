@@ -142,6 +142,22 @@ class Resolver:
             lambda leaf, ax: self.sharding_for(leaf.shape, ax), tree, axes_tree)
 
 
+def batch_partition_spec(mesh: Mesh, shape) -> PartitionSpec:
+    """Data-parallel spec for a batch-leading array, divisibility-checked.
+
+    The batch-axis subset of the resolver's rules, shared with
+    ``repro.parallel``: dimension 0 is logical ``batch``, everything else
+    unsharded, resolved under the ``dp_only`` profile (batch takes every
+    mesh axis present). The standard divisibility fallback applies — when
+    the batch does not divide the mesh, the spec comes back unsharded
+    (``spec[0] is None``) and the caller decides how to cope
+    (``parallel.infer_batch_sharded`` pads to divisible and slices the
+    valid prefix back out).
+    """
+    logical = ("batch",) + (None,) * (len(shape) - 1)
+    return Resolver(mesh, profile="dp_only").spec_for(tuple(shape), logical)
+
+
 def is_axes_leaf(x) -> bool:
     return isinstance(x, tuple) and all(
         isinstance(e, (str, type(None))) for e in x)

@@ -20,6 +20,19 @@ from .stages import (collect, convert, fit_cnn, from_params,  # noqa: F401
                      price, price_record, reset_stage_counts, run,
                      run_with_data, stage_counts, sweep, train)
 
+# the sweep *runner* module (python -m repro.study.sweep). Importing it
+# binds the package attribute ``sweep`` to the module — shadowing the stage
+# helper just imported. The module is a callable ModuleType delegating
+# __call__ to stages.sweep (see its naming note), so `study.sweep(base,
+# variants)` behaves identically either way; importing it eagerly here
+# makes the shadowing deterministic instead of import-order-dependent.
+# NB: `from . import sweep` would NOT work — the name is already bound on
+# the package, so _handle_fromlist skips the submodule import entirely;
+# import_module always executes it and rebinds the attribute.
+import importlib as _importlib  # noqa: E402
+
+sweep = _importlib.import_module(".sweep", __name__)
+
 __all__ = [
     "StudySpec", "StudySpecError", "UnknownDatasetError",
     "UnknownBackendError", "UnknownNeuronModeError", "UnknownInputModeError",

@@ -1,0 +1,334 @@
+"""The sharded, resumable paper-grid sweep runner.
+
+    PYTHONPATH=src python -m repro.study.sweep [--quick] [--out sweep_out]
+
+The paper's headline result is a *grid*: SNN-vs-CNN energy/latency/accuracy
+across MNIST, SVHN and CIFAR-10, per backend, per pricing variant
+(compressed encoding × memory residency × CNN bit width). This module fans
+that grid out as independent **cells** (one :class:`StudySpec` each) and
+runs them through the staged pipeline with three production properties:
+
+- **Sharded**: each cell executes inside ``parallel.use_mesh(mesh)``, so
+  the collect stage's batched SNN inference is data-parallel over the
+  device mesh (bit-exact vs single-device — the results are
+  interchangeable, which is why the cache below is safe to share).
+- **Resumable**: every finished cell is checkpointed as one JSON file named
+  by a content hash of its spec (:func:`cell_id`), and the stage artifacts
+  behind it (train/convert/collect) persist in a disk-backed
+  :class:`~repro.study.cache.StudyCache`. A killed sweep re-run therefore
+  loads completed cells from their checkpoints and *unfinished* cells from
+  whatever stage artifacts already exist — zero recomputation, pinned by
+  ``tests/test_sweep.py`` via the stage-execution counters.
+- **Partitionable**: ``--cell-shard K/N`` runs only cells with
+  ``index % N == K`` against the shared cache/output directories, so N
+  workers (CI jobs, processes) can split one grid; whichever worker
+  finishes last writes the consolidated report.
+
+Output: per-cell checkpoints under ``<out>/cells/``, one consolidated
+``sweep_report.json``, and a ``sweep_grid.md`` markdown table
+(:func:`markdown_grid`).
+
+Naming note: ``repro.study.sweep`` the *module* (this file) shadows
+``repro.study.stages.sweep`` the *function* on the package attribute every
+time the submodule is imported. To keep the long-standing
+``study.sweep(base, variants)`` API working regardless of import order,
+this module's class is swapped for a **callable** ModuleType that delegates
+``__call__`` to ``stages.sweep`` (see the bottom of the file) — so
+``study.sweep`` behaves identically whether it currently names the function
+or this module. Reach the runner API with
+``from repro.study.sweep import run_sweep``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+import time
+import types
+
+from .cache import StudyCache, content_key
+from .spec import StudySpec
+
+DATASETS = ("mnist", "svhn", "cifar10")
+BACKENDS = ("dense", "queue_pallas")
+# pricing axes: (compressed, vmem_resident, weight_bits) — price-stage-only
+# fields, so every variant of a (dataset, backend) pair reuses ONE collect
+PRICING = tuple((c, v, w) for c in (True, False) for v in (True, False)
+                for w in (8, 4))
+QUICK_PRICING = ((True, True, 8), (False, True, 8))
+
+# --quick: the same grid shape at smoke scale (CI cron runs this end to end)
+QUICK_OVERRIDES = dict(n_train=192, epochs=1, train_batch=64, n_eval=32,
+                       n_calib=48, n_balance=24, T=2)
+
+
+def paper_grid(*, quick: bool = False, datasets=None, backends=None,
+               pricing=None, overrides=None) -> list[StudySpec]:
+    """The grid as a cell list, ordered so pricing variants are adjacent.
+
+    Cells group by (dataset, backend) with all pricing variants of a pair
+    consecutive: a kill boundary then strands at most one collect artifact
+    mid-flight, and the sweep's cache turns every later variant of an
+    already-collected pair into pure repricing.
+    """
+    datasets = DATASETS if datasets is None else tuple(datasets)
+    backends = (("dense",) if quick else BACKENDS) if backends is None \
+        else tuple(backends)
+    pricing = (QUICK_PRICING if quick else PRICING) if pricing is None \
+        else tuple(pricing)
+    extra = dict(QUICK_OVERRIDES) if quick else {}
+    extra.update(overrides or {})
+    cells = []
+    for ds in datasets:
+        for backend in backends:
+            for compressed, vmem, wbits in pricing:
+                cells.append(StudySpec(
+                    dataset=ds, backend=backend, compressed=compressed,
+                    vmem_resident=vmem, weight_bits=wbits, **extra))
+    return cells
+
+
+def cell_id(spec: StudySpec) -> str:
+    """Content hash of every spec field — the checkpoint identity.
+
+    Two sweeps agree on a cell's checkpoint iff they agree on the full
+    spec, so a grid definition change can never alias a stale cell file
+    (the same property the stage caches get from ``content_key``).
+    """
+    return content_key("sweep-cell-v1", dataclasses.asdict(spec))
+
+
+def _atomic_write(path: str, write) -> None:
+    """tmp file + rename so a killed sweep never leaves a torn checkpoint
+    (``write`` receives the open file object); tmp cleaned up on failure."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            write(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _atomic_write_json(path: str, payload: dict) -> None:
+    _atomic_write(path, lambda f: json.dump(payload, f, indent=2,
+                                            sort_keys=True))
+
+
+def _cell_path(out_dir: str, spec: StudySpec) -> str:
+    return os.path.join(out_dir, "cells",
+                        f"cell_{spec.dataset}_{cell_id(spec)}.json")
+
+
+def _cell_payload(spec: StudySpec, report, elapsed_s: float) -> dict:
+    return {
+        "schema": "sweep-cell-v1",
+        "cell_id": cell_id(spec),
+        "spec": dataclasses.asdict(spec),
+        "report": report.to_json(),
+        "elapsed_s": elapsed_s,
+    }
+
+
+def run_sweep(cells, *, out_dir: str, cache: StudyCache | None = None,
+              cache_dir: str | None = None, mesh=None,
+              max_cells: int | None = None, fresh: bool = False,
+              cell_shard: tuple[int, int] = (0, 1), log=print) -> dict:
+    """Run (or resume) the grid; returns the sweep summary dict.
+
+    - ``cache``/``cache_dir``: the stage-artifact cache. When only a dir is
+      given, a :class:`StudyCache` persisting train/convert **and collect**
+      artifacts is built over it — collect on disk is what makes a kill
+      between pricing variants resume without re-running SNN inference.
+    - ``mesh``: a 1-D device mesh (``parallel.data_mesh()``); cells execute
+      under ``parallel.use_mesh(mesh)``. ``None`` = single device.
+    - ``max_cells``: stop after executing this many *non-resumed* cells
+      (the kill knob the resumability test uses).
+    - ``fresh``: ignore existing cell checkpoints (stage caches still hit).
+    - ``cell_shard``: ``(k, n)`` — run only cells with ``index % n == k``.
+
+    The consolidated report is written only once every cell's checkpoint
+    exists (so N workers sharing ``out_dir`` finish it exactly once, last
+    writer wins with identical content).
+    """
+    from .. import parallel
+    from . import stages
+
+    if cache is None:
+        cache = StudyCache(dir=cache_dir,
+                           disk_kinds=("train", "convert", "collect"))
+    k, n = cell_shard
+    if not (isinstance(k, int) and isinstance(n, int) and 0 <= k < n):
+        raise ValueError(f"cell_shard must be (k, n) with 0 <= k < n, "
+                         f"got {cell_shard!r}")
+
+    executed, resumed, skipped = [], [], []
+    for idx, spec in enumerate(cells):
+        path = _cell_path(out_dir, spec)
+        if idx % n != k:
+            skipped.append(idx)
+            continue
+        if not fresh and os.path.exists(path):
+            resumed.append(idx)
+            log(f"[sweep] cell {idx + 1}/{len(cells)} resumed: "
+                f"{spec.dataset}/{spec.backend}/{spec.pricing_label()}")
+            continue
+        if max_cells is not None and len(executed) >= max_cells:
+            log(f"[sweep] stopping after {max_cells} executed cell(s) "
+                f"(--max-cells); resume to continue")
+            break
+        t0 = time.perf_counter()
+        with parallel.use_mesh(mesh):
+            report = stages.run(spec, cache=cache)
+        elapsed = time.perf_counter() - t0
+        _atomic_write_json(path, _cell_payload(spec, report, elapsed))
+        executed.append(idx)
+        log(f"[sweep] cell {idx + 1}/{len(cells)} done in {elapsed:.1f}s: "
+            f"{spec.dataset}/{spec.backend}/{spec.pricing_label()} "
+            f"snn_acc={report.snn_acc:.3f}")
+
+    rows, missing = [], []
+    for spec in cells:
+        path = _cell_path(out_dir, spec)
+        if os.path.exists(path):
+            with open(path) as f:
+                rows.append(json.load(f))
+        else:
+            missing.append(_cell_path(out_dir, spec))
+
+    summary = {
+        "schema": "sweep-v1",
+        "n_cells": len(cells),
+        "n_completed": len(rows),
+        "executed": len(executed),
+        "resumed": len(resumed),
+        "complete": not missing,
+        "cells": rows,
+    }
+    if not missing:
+        report_path = os.path.join(out_dir, "sweep_report.json")
+        grid_path = os.path.join(out_dir, "sweep_grid.md")
+        _atomic_write_json(report_path, summary)
+        md = markdown_grid(rows)
+        _atomic_write(grid_path, lambda f: f.write(md))
+        summary["report_path"] = report_path
+        summary["grid_path"] = grid_path
+        log(f"[sweep] grid complete: {len(rows)} cells -> {report_path}")
+    else:
+        log(f"[sweep] {len(missing)} cell(s) still missing; consolidated "
+            "report deferred (resume, or let the other cell-shards finish)")
+    return summary
+
+
+def markdown_grid(cell_rows) -> str:
+    """The consolidated grid as a markdown table (one row per cell)."""
+    header = ("| dataset | backend | pricing | snn_acc | cnn_acc "
+              "| snn E med (J) | cnn E (J) | snn FPS/W med | cnn FPS/W "
+              "| overflow |\n"
+              "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for row in cell_rows:
+        s, r = row["spec"], row["report"]
+        pricing = (("c" if s["compressed"] else "u") + "+"
+                   + ("VMEM" if s["vmem_resident"] else "HBM")
+                   + f"+w{s['weight_bits']}")
+        lines.append(
+            f"| {s['dataset']} | {s['backend']} | {pricing} "
+            f"| {r['snn_acc']:.3f} | {r['cnn_acc']:.3f} "
+            f"| {r['snn_energy_j_deciles'][3]:.3g} | {r['cnn_energy_j']:.3g} "
+            f"| {r['snn_fps_per_w_deciles'][3]:.0f} "
+            f"| {r['cnn_fps_per_w']:.0f} | {r['overflow']} |")
+    return "# Paper grid — SNN vs CNN\n\n" + header + "\n".join(lines) + "\n"
+
+
+def _parse_shard(s: str) -> tuple[int, int]:
+    try:
+        k, n = s.split("/")
+        return int(k), int(n)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--cell-shard wants K/N (e.g. 0/4), got {s!r}") from None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.study.sweep",
+        description="Run the paper grid as a resumable, sharded sweep.")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-scale grid (CI cron runs this end to end)")
+    ap.add_argument("--datasets", default=None,
+                    help=f"comma list (default: {','.join(DATASETS)})")
+    ap.add_argument("--backends", default=None,
+                    help="comma list (default: dense,queue_pallas; "
+                         "--quick defaults to dense)")
+    ap.add_argument("--out", default="sweep_out",
+                    help="output dir: cells/, sweep_report.json, "
+                         "sweep_grid.md (default: sweep_out)")
+    ap.add_argument("--cache", default=None,
+                    help="stage-artifact cache dir (default: <out>/cache)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="devices in the data mesh (default: all visible; "
+                         "0 disables sharding)")
+    ap.add_argument("--max-cells", type=int, default=None,
+                    help="execute at most N cells this run (kill/resume aid)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore existing cell checkpoints")
+    ap.add_argument("--cell-shard", type=_parse_shard, default=(0, 1),
+                    metavar="K/N", help="run only cells with index%%N == K")
+    args = ap.parse_args(argv)
+
+    from .. import parallel
+
+    if args.mesh == 0:
+        mesh = None
+    elif args.mesh is not None:
+        mesh = parallel.data_mesh(args.mesh)
+    else:
+        mesh = parallel.data_mesh() if parallel.device_count() > 1 else None
+    print(f"[sweep] mesh: "
+          f"{'none (single device)' if mesh is None else dict(mesh.shape)}")
+
+    cells = paper_grid(
+        quick=args.quick,
+        datasets=args.datasets.split(",") if args.datasets else None,
+        backends=args.backends.split(",") if args.backends else None)
+    print(f"[sweep] {len(cells)} cells "
+          f"({'quick' if args.quick else 'full'} grid)")
+
+    summary = run_sweep(
+        cells, out_dir=args.out,
+        cache_dir=args.cache or os.path.join(args.out, "cache"),
+        mesh=mesh, max_cells=args.max_cells, fresh=args.fresh,
+        cell_shard=args.cell_shard)
+
+    if summary["complete"]:
+        with open(summary["grid_path"]) as f:
+            print(f.read())
+        return 0
+    print(f"[sweep] incomplete: {summary['n_completed']}/"
+          f"{summary['n_cells']} cells checkpointed")
+    return 3
+
+
+class _CallableSweepModule(types.ModuleType):
+    """ModuleType that doubles as the ``stages.sweep`` helper (see the
+    module docstring's naming note). The signature mirrors
+    ``stages.sweep`` exactly; delegation is late-bound so monkeypatching
+    ``stages.sweep`` behaves the same through either name."""
+
+    def __call__(self, base, variants, *, cache=None):
+        from . import stages
+
+        return stages.sweep(base, variants, cache=cache)
+
+
+sys.modules[__name__].__class__ = _CallableSweepModule
+
+if __name__ == "__main__":
+    raise SystemExit(main())
