@@ -231,5 +231,35 @@ def snn_engine_queue_bench():
          f"steady_vs_dense_x={mins['dense'] / mins['fused_batch']:.2f}")
 
 
+def snn_sparse_rate_sweep_bench():
+    """Measured latency vs spike rate on the occupancy-gated sparse kernel.
+
+    The success metric of the sparse realization: because the event budget
+    (``e_cap``) is a power-of-two bucket over the *measured* surviving-event
+    total, the dispatched program's work shrinks with activity, so measured
+    ``us_per_call`` must fall monotonically from rate 0.6 to 0.02 — where
+    the dense-work fused realization stays flat on the same occupancies.
+    One interleaved min-of-N run shared with ``break_even`` (which reads the
+    sparse-vs-dense crossing off the same rows).
+    """
+    from .common import sparse_rate_sweep
+
+    rows = sparse_rate_sweep()
+    for r in rows:
+        emit(f"kernel/sparse_rate_sweep/rate_{r['rate']:.3f}",
+             r["sparse_us"],
+             f"events={r['events']};e_cap={r['e_cap']};"
+             f"dense_us={r['dense_us']:.1f};impl={r['sparse_impl']}")
+
+    times = [r["sparse_us"] for r in rows]        # rates descend hi -> lo
+    dense = [r["dense_us"] for r in rows]
+    decreasing = all(a > b for a, b in zip(times, times[1:]))
+    emit("kernel/sparse_rate_sweep/monotonic", 0.0,
+         f"strictly_decreasing={decreasing};"
+         f"hi_lo_speedup_x={times[0] / times[-1]:.2f};"
+         f"dense_flat_x={max(dense) / min(dense):.2f}")
+
+
 ALL = [event_accum_bench, spike_compact_bench, quant_matmul_bench,
-       moe_gather_bench, snn_engine_scan_bench, snn_engine_queue_bench]
+       moe_gather_bench, snn_engine_scan_bench, snn_engine_queue_bench,
+       snn_sparse_rate_sweep_bench]

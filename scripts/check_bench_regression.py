@@ -56,6 +56,42 @@ def compare(base: dict, new: dict, warn_ratio: float, fail_ratio: float):
     return comparisons, regressions, warnings, skipped, only_one
 
 
+def check_sparse_sweep(new: dict):
+    """Structural gate over the ``kernel/sparse_rate_sweep/rate_*`` family.
+
+    The sparse realization's whole point is that measured latency falls as
+    spike rate falls, so this family is gated on *shape*, not on a ratio
+    against the baseline: the lowest-rate cell must be strictly faster than
+    the highest-rate cell (fatal if not — occupancy gating is broken), and
+    any adjacent-rate inversion is a warning (noise on a loaded box can
+    wiggle neighbors, but must not flip the ends). Checked on the NEW
+    snapshot only; absent family (a --only subset that skipped kernel
+    benches) is a no-op.
+    """
+    prefix = "kernel/sparse_rate_sweep/rate_"
+    cells = []
+    for name, row in new.items():
+        if name.startswith(prefix):
+            cells.append((float(name[len(prefix):]),
+                          float(row.get("us_per_call", 0.0))))
+    if len(cells) < 2:
+        return [], []
+    cells.sort(reverse=True)                   # rate hi -> lo
+    errors, warns = [], []
+    if cells[-1][1] >= cells[0][1]:
+        errors.append(
+            f"sparse_rate_sweep not decreasing end to end: rate "
+            f"{cells[-1][0]:g} took {cells[-1][1]:.1f}us vs "
+            f"{cells[0][1]:.1f}us at rate {cells[0][0]:g}")
+    for (r_hi, t_hi), (r_lo, t_lo) in zip(cells, cells[1:]):
+        if t_lo >= t_hi:
+            warns.append(
+                f"sparse_rate_sweep inversion: rate {r_lo:g} "
+                f"({t_lo:.1f}us) not faster than rate {r_hi:g} "
+                f"({t_hi:.1f}us)")
+    return errors, warns
+
+
 def markdown_report(args, comparisons, regressions, warnings, skipped,
                     only_one) -> str:
     lines = ["## Bench regression gate", "",
@@ -110,22 +146,31 @@ def main(argv=None) -> int:
     if not 1.0 < args.warn_ratio <= args.fail_ratio:
         ap.error("need 1 < warn-ratio <= fail-ratio")
 
+    new_rows = load_rows(args.new)
     comparisons, regressions, warnings, skipped, only_one = compare(
-        load_rows(args.baseline), load_rows(args.new),
+        load_rows(args.baseline), new_rows,
         args.warn_ratio, args.fail_ratio)
+    sweep_errors, sweep_warns = check_sparse_sweep(new_rows)
     report = markdown_report(args, comparisons, regressions, warnings,
                              skipped, only_one)
+    if sweep_errors or sweep_warns:
+        report += "\n### Sparse rate-sweep shape gate\n\n" + "\n".join(
+            [f"- ❌ {e}" for e in sweep_errors]
+            + [f"- ⚠️ {w}" for w in sweep_warns]) + "\n"
     print(report)
     if args.summary:
         with open(args.summary, "a") as f:
             f.write(report + "\n")
 
-    if regressions:
-        print(f"FAIL: {len(regressions)} row(s) regressed more than "
-              f"{args.fail_ratio:g}x", file=sys.stderr)
+    if regressions or sweep_errors:
+        for e in sweep_errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        if regressions:
+            print(f"FAIL: {len(regressions)} row(s) regressed more than "
+                  f"{args.fail_ratio:g}x", file=sys.stderr)
         return 1
     print(f"ok: no regression above {args.fail_ratio:g}x "
-          f"({len(warnings)} warning(s))", file=sys.stderr)
+          f"({len(warnings) + len(sweep_warns)} warning(s))", file=sys.stderr)
     return 0
 
 

@@ -258,6 +258,15 @@ class SNNConfig(NamedTuple):
     input_theta: float = 0.1   # threshold for binary input encoding
     v_init_frac: float = 0.5   # initial charge as a fraction of V_t (Rueckauer:
                                # centers the spike-count quantizer, round-vs-floor)
+    weight_bits: int | None = None
+                               # deployed integer weight width on the event
+                               # path. None = fp32 everywhere (every pre-
+                               # existing config). When set, the sparse
+                               # realization (queue_sparse; ref-anchored by
+                               # queue_ref) runs the int-quantized conv
+                               # accumulate and the shared output layer runs
+                               # the int8 quant_matmul head; other conv
+                               # backends keep fp32 convs regardless.
 
 
 class SNNStats(NamedTuple):
@@ -477,21 +486,28 @@ class QueueBackend:
     batch axis in the kernel grid rather than an outer ``jax.vmap``. Both
     drop over-depth events identically, so logits and every stat stay
     bit-compatible with the reference.
+
+    ``accum='ref'`` (the ``queue_ref`` backend) routes the same batched plan
+    through the ``kernels/ref.py`` scatter oracle — slow, but the engine-
+    level parity anchor the ``queue_sparse`` backend is pinned bit-exact
+    against (and the only non-sparse accum honoring ``cfg.weight_bits``).
     """
 
     def __init__(self, accum: str = "jax"):
-        if accum not in ("jax", "pallas"):
-            raise ValueError(f"accum must be 'jax' or 'pallas', got {accum!r}")
+        if accum not in ("jax", "pallas", "ref"):
+            raise ValueError(
+                f"accum must be 'jax', 'pallas', or 'ref', got {accum!r}")
         self.accum = accum
-        self.name = "queue" if accum == "jax" else "queue_pallas"
+        self.name = {"jax": "queue", "pallas": "queue_pallas",
+                     "ref": "queue_ref"}[accum]
 
     @property
     def supports_batch(self) -> bool:
         """Fused accumulation is batch-native; the word-level path is not."""
-        return self.accum == "pallas"
+        return self.accum != "jax"
 
     def conv_layer(self, cp, w, b, vth, cfg, raster, analog):
-        if self.accum == "pallas":
+        if self.accum != "jax":
             # single sample == batch of one through the fused pipeline
             out, row = self.conv_layer_batch(
                 cp, w, b, vth, cfg,
@@ -568,11 +584,18 @@ class QueueBackend:
                    * cp.out_c).astype(jnp.int32)
 
             K2, P = occ.shape[-2:]
+            # accum='ref' pins the scatter oracle as an *engine* backend —
+            # the parity anchor the sparse realization is tested against —
+            # and is the only non-sparse accum honoring cfg.weight_bits
+            # (the quant scatter oracle)
             cur = kops.fused_spike_accum(
                 occ.reshape(B * T, cp.in_c, K2, P), w,
                 K=cp.kernel, n_win=fmt.n_win, bits=fmt.bits_coord,
                 depth=cfg.depth, H=cp.in_hw, W=cp.in_hw,
-                invalid=fmt.invalid_word)
+                invalid=fmt.invalid_word,
+                impl="ref" if self.accum == "ref" else None,
+                weight_bits=(cfg.weight_bits if self.accum == "ref"
+                             else None))
             cur = cur.reshape(B, T, cp.in_hw, cp.in_hw, cp.out_c) + b
         else:
             z = jnp.zeros((B,), jnp.int32)
@@ -594,6 +617,155 @@ class QueueBackend:
         row = LayerStats(ev, out_raster.sum((1, 2, 3, 4)).astype(jnp.int32),
                          ops, q_words, ovf)
         return out_raster, row
+
+
+# --- the occupancy-gated sparse backend -----------------------------------
+#
+# The per-layer programs are jitted *individually* (not as one whole-plan
+# jit) because the backend's dispatch is data-dependent: it measures each
+# layer's surviving-event total, pulls that ONE scalar to the host, and
+# dispatches the program specialized to the matching power-of-two event
+# bucket. lru caches keyed on the hashable static parts (ConvPlan,
+# SNNConfig, bucket) play the role engine._runner's cache plays for the
+# traced backends.
+
+@functools.lru_cache(maxsize=None)
+def _sparse_stats_fn(cp: ConvPlan, depth: int):
+    """Jitted occupancy/stats pass for one conv stage (the gate's input)."""
+    spans = span_map(cp.fmt, cp.in_hw)
+
+    @jax.jit
+    def f(raster):                                 # (B, T, H, W, C)
+        occ = phase_occupancy(cp.fmt, raster)      # (B, T, C, K2, P)
+        tot = (occ > 0).sum(-1)
+        capped = jnp.minimum(tot, depth)
+        ev = capped.sum((1, 2, 3)).astype(jnp.int32)
+        ovf = (tot - capped).sum((1, 2, 3)).astype(jnp.int32)
+        keep = segment_keep(occ, depth)
+        ops_ = ((keep * spans[None, None, None]).sum((1, 2, 3, 4))
+                * cp.out_c).astype(jnp.int32)
+        total = capped.sum().astype(jnp.int32)     # the occupancy gate
+        n_act = (occ > 0).any((2, 3, 4)).sum().astype(jnp.int32)
+        return occ, ev, ovf, ops_, total, n_act
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_layer_fn(cp: ConvPlan, cfg: SNNConfig, impl: str,
+                     e_cap: int, n_rows: int | None):
+    """Jitted sparse accumulate + neuron scan, specialized per event bucket."""
+    from ..kernels import ops as kops
+
+    model = get_neuron_model(cfg.mode)
+
+    @jax.jit
+    def f(occ, w, b, vth):
+        B = occ.shape[0]
+        K2, P = occ.shape[-2:]
+        cur = kops.fused_spike_accum(
+            occ.reshape(B * cfg.T, cp.in_c, K2, P), w,
+            K=cp.kernel, n_win=cp.fmt.n_win, bits=cp.fmt.bits_coord,
+            depth=cfg.depth, H=cp.in_hw, W=cp.in_hw,
+            invalid=cp.fmt.invalid_word, impl=impl, e_cap=e_cap,
+            n_rows=n_rows, weight_bits=cfg.weight_bits)
+        cur = cur.reshape(B, cfg.T, cp.in_hw, cp.in_hw, cp.out_c) + b
+        step = jax.vmap(_conv_step(cp, model, vth))
+        carry = _init_carry_batch(cp, cfg, vth, w.dtype, B)
+        _, frames = jax.lax.scan(step, carry, jnp.moveaxis(cur, 1, 0),
+                                 unroll=True)
+        return jnp.moveaxis(frames, 0, 1)          # (B, T, H', W', C')
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_analog_fn(cp: ConvPlan, cfg: SNNConfig):
+    """Jitted analog (constant-current) first-layer body — no events yet."""
+    model = get_neuron_model(cfg.mode)
+
+    @jax.jit
+    def f(analog, w, b, vth):
+        B = analog.shape[0]
+        c1 = jax.lax.conv_general_dilated(
+            analog.astype(w.dtype), w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        cur = jnp.broadcast_to(c1[:, None], (B, cfg.T) + c1.shape[1:])
+        step = jax.vmap(_conv_step(cp, model, vth))
+        carry = _init_carry_batch(cp, cfg, vth, w.dtype, B)
+        _, frames = jax.lax.scan(step, carry, jnp.moveaxis(cur, 1, 0),
+                                 unroll=True)
+        return jnp.moveaxis(frames, 0, 1)
+
+    return f
+
+
+class SparseQueueBackend:
+    """Occupancy-gated sparse realization: measured work drops with rate.
+
+    Same queue semantics (drop rule, stats, neuron registry) as the fused
+    ``queue_pallas`` plan, but the accumulate runs over a compacted event
+    list (``kernels/spike_sparse``) whose static capacity is picked *per
+    layer, per call* from the measured surviving-event total — the
+    occupancy gate. That pull of one scalar per layer to the host is what
+    ``host_dispatch = True`` declares: the plan walk cannot live inside one
+    whole-program jit (``_runner`` returns a Python driver instead), and
+    shard_map-based data parallelism falls back to the local runner
+    (``repro.parallel`` detects the flag; bit-exact per the mask contract).
+
+    ``cfg.weight_bits`` selects the int-quantized accumulate (int8 weights,
+    exact integer accumulation, fp32 dequant — the revived ``quant_matmul``
+    contract) in both the conv stages and the shared output head.
+
+    Parity: logits and stats are pinned **bit-exact** against the
+    ``queue_ref`` scatter-oracle backend (and to float tolerance against
+    ``dense``/``queue``) across modes × encodings × batch sizes, including
+    the small-depth overflow regime — see ``tests/test_sparse.py``.
+    """
+
+    name = "queue_sparse"
+    supports_batch = True
+    host_dispatch = True
+
+    def conv_layer(self, cp, w, b, vth, cfg, raster, analog):
+        out, row = self.conv_layer_batch(
+            cp, w, b, vth, cfg,
+            None if raster is None else raster[None],
+            None if analog is None else analog[None])
+        return out[0], LayerStats(*(f[0] for f in row))
+
+    def conv_layer_batch(self, cp, w, b, vth, cfg, raster, analog):
+        from ..kernels import ops as kops
+        from ..kernels.spike_sparse import event_bucket, max_kept_events
+
+        B = (raster if raster is not None else analog).shape[0]
+        if raster is None:
+            z = jnp.zeros((B,), jnp.int32)
+            per_sample = analog.shape[1] * analog.shape[2] * analog.shape[3]
+            ops_ = jnp.full((B,), cfg.T * per_sample * cp.out_c
+                            * cp.kernel * cp.kernel, jnp.int32)
+            out = _sparse_analog_fn(cp, cfg)(analog, w, b, vth)
+            row = LayerStats(z, out.sum((1, 2, 3, 4)).astype(jnp.int32),
+                             ops_, z, z)
+            return out, row
+
+        occ, ev, ovf, ops_, total, n_act = _sparse_stats_fn(
+            cp, cfg.depth)(raster)
+
+        # THE occupancy gate: one scalar to the host, then dispatch the
+        # program specialized to the matching power-of-two bucket
+        N = B * cfg.T
+        K2, P = occ.shape[-2:]
+        impl = kops.default_sparse_impl()
+        e_cap = event_bucket(
+            int(total), max_kept_events((N, cp.in_c, K2, P), cfg.depth))
+        n_rows = (min(event_bucket(int(n_act), N), N)
+                  if impl.startswith("sparse_pallas") else None)
+        out = _sparse_layer_fn(cp, cfg, impl, e_cap, n_rows)(occ, w, b, vth)
+
+        row = LayerStats(ev, out.sum((1, 2, 3, 4)).astype(jnp.int32),
+                         ops_, ev, ovf)
+        return out, row
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -625,19 +797,44 @@ def available_backends() -> tuple[str, ...]:
 # Shared execution driver
 # ---------------------------------------------------------------------------
 
-def _output_layer(params_out, T: int, raster: jnp.ndarray):
+def _output_layer(params_out, T: int, raster: jnp.ndarray,
+                  weight_bits: int | None = None):
     """Final dense layer: accumulate Vm over all T steps, no thresholding.
 
     Shared verbatim by every backend — the event-driven accumulation of the
     spike raster and the vectorized matmul are the same arithmetic, and the
     stats (events = spikes arriving, adds = events * N_out) are identical.
+
+    ``weight_bits`` (the deployed integer weight width, ``cfg.weight_bits``)
+    switches the matmul to the revived ``kernels.quant_matmul`` path: binary
+    spikes summed over time are exact small integers (≤ T, so int8 holds
+    them whenever T ≤ 127), the weights are symmetric-quantized, the product
+    accumulates exactly in int32, and one fp32 dequant scales the logits.
     """
     w, b = params_out["w"], params_out["b"]
     flat = raster.reshape(T, -1)                        # (T, HWC order)
-    logits = (flat @ w).sum(0) + b * T
+    if weight_bits is not None and T <= 127:
+        logits = _quant_head(flat.sum(0)[None], w, weight_bits)[0] + b * T
+    else:
+        logits = (flat @ w).sum(0) + b * T
     ev = (flat > 0).sum().astype(jnp.int32)
     row = LayerStats(ev, _zero(), ev * jnp.int32(w.shape[1]), _zero(), _zero())
     return logits, row
+
+
+def _quant_head(counts, w, weight_bits: int):
+    """Shared int-quantized output matmul: (B, F) spike counts -> (B, N).
+
+    Spike counts are already integers, so their "quantization" is exact
+    (scale 1); only the weights lose precision. Bias and stats are left to
+    the caller — only the matmul arithmetic changes.
+    """
+    from ..kernels import ops as kops
+    from .quantization import quantize_symmetric
+
+    w_q, w_scale = quantize_symmetric(w, weight_bits)
+    return kops.quant_matmul(
+        counts.astype(jnp.int8), w_q, jnp.float32(1.0), w_scale)
 
 
 def _encode_input(cfg: SNNConfig, image: jnp.ndarray):
@@ -682,7 +879,8 @@ def _execute(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
         analog = None
         rows.append(row)
 
-    logits, row = _output_layer(params[plan.out.index], cfg.T, raster)
+    logits, row = _output_layer(params[plan.out.index], cfg.T, raster,
+                                cfg.weight_bits)
     rows.append(row)
 
     stats = SNNStats(
@@ -695,12 +893,16 @@ def _execute(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
     return logits, stats
 
 
-def _output_layer_batch(params_out, T: int, raster: jnp.ndarray):
+def _output_layer_batch(params_out, T: int, raster: jnp.ndarray,
+                        weight_bits: int | None = None):
     """:func:`_output_layer` over a (B, T, ...) raster — same math, batched."""
     w, b = params_out["w"], params_out["b"]
     B = raster.shape[0]
     flat = raster.reshape(B, T, -1)
-    logits = (flat @ w).sum(1) + b * T
+    if weight_bits is not None and T <= 127:
+        logits = _quant_head(flat.sum(1), w, weight_bits) + b * T
+    else:
+        logits = (flat @ w).sum(1) + b * T
     ev = (flat > 0).sum(axis=(1, 2)).astype(jnp.int32)
     z = jnp.zeros((B,), jnp.int32)
     row = LayerStats(ev, z, ev * jnp.int32(w.shape[1]), z, z)
@@ -735,7 +937,8 @@ def _execute_batch(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
         analog = None
         rows.append(row)
 
-    logits, row = _output_layer_batch(params[plan.out.index], cfg.T, raster)
+    logits, row = _output_layer_batch(params[plan.out.index], cfg.T, raster,
+                                      cfg.weight_bits)
     rows.append(row)
 
     B = logits.shape[0]
@@ -759,6 +962,28 @@ def _runner(cfg: SNNConfig, backend_name: str, batched: bool):
     """
     backend = get_backend(backend_name)
     plan = compile_plan(cfg.spec, cfg.input_hw, cfg.input_c, cfg.compressed)
+
+    if getattr(backend, "host_dispatch", False):
+        # Occupancy-gated backends pull a scalar to the host between layers
+        # to pick the event bucket, so the plan walk cannot be traced as one
+        # program. Return a plain Python driver; each per-layer program is
+        # individually jitted and bucket-cached inside the backend.
+        if batched and getattr(backend, "supports_batch", False):
+            def run(params, thresholds, images):
+                return _execute_batch(plan, backend, cfg, params,
+                                      tuple(thresholds), images)
+        else:
+            def run_one(params, thresholds, image):
+                return _execute(plan, backend, cfg, params, tuple(thresholds),
+                                image)
+
+            if batched:
+                def run(params, thresholds, images):
+                    outs = [run_one(params, thresholds, im) for im in images]
+                    return jax.tree.map(lambda *a: jnp.stack(a), *outs)
+            else:
+                run = run_one
+        return run
 
     if batched and getattr(backend, "supports_batch", False):
         def run(params, thresholds, images):
@@ -864,7 +1089,12 @@ register_backend("dense", DenseBackend())
 register_backend("dense_unrolled", DenseBackend(unroll=True))
 register_backend("queue", QueueBackend())
 register_backend("queue_pallas", QueueBackend(accum="pallas"))
+register_backend("queue_ref", QueueBackend(accum="ref"))
+register_backend("queue_sparse", SparseQueueBackend())
 
 # a re-registered neuron mode must invalidate compiled runners too, or a
-# cached executable would keep executing the old fire function
+# cached executable would keep executing the old fire function — including
+# the sparse backend's per-layer bucket caches, which close over the model
 _on_registry_change.append(_runner.cache_clear)
+_on_registry_change.append(_sparse_layer_fn.cache_clear)
+_on_registry_change.append(_sparse_analog_fn.cache_clear)

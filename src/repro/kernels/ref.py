@@ -109,6 +109,53 @@ def fused_spike_accum_ref(occ, weights, *, K, n_win, depth, H, W):
     return out
 
 
+def fused_spike_accum_quant_ref(occ, weights, *, K, n_win, depth, H, W,
+                                weight_bits=8):
+    """Quantized-weight variant of :func:`fused_spike_accum_ref`.
+
+    Same event set and scatter order; the weights are symmetric-quantized to
+    ``weight_bits`` integers, every contribution is accumulated *exactly* in
+    int32, and one fp32 dequant scales the result — the ``quant_matmul``
+    contract (int8 operands, exact integer product, fp32 dequant) applied to
+    the event accumulate. This is the parity anchor for the sparse
+    realization's ``weight_bits`` path.
+    """
+    from ..core.quantization import quantize_symmetric
+
+    N, C_in, K2, P = occ.shape
+    pad = K // 2
+    w_q, w_scale = quantize_symmetric(weights, weight_bits)
+    w_i = w_q.astype(jnp.int32)
+    C_out = weights.shape[-1]
+
+    fired = occ > 0
+    slot = jnp.cumsum(fired.astype(jnp.int32), axis=-1) - 1
+    fired = fired & (slot < depth)
+
+    pos = jnp.arange(P, dtype=jnp.int32)
+    wy, wx = pos // n_win, pos % n_win
+    ph = jnp.arange(K2, dtype=jnp.int32)[:, None]
+    y = wy[None, :] * K + ph // K
+    x = wx[None, :] * K + ph % K
+
+    acc = jnp.zeros((N, H, W, C_out), jnp.int32)
+    nidx = jnp.broadcast_to(jnp.arange(N)[:, None, None, None], fired.shape)
+    cidx = jnp.broadcast_to(jnp.arange(C_in)[None, :, None, None], fired.shape)
+    yb = jnp.broadcast_to(y[None, None], fired.shape)
+    xb = jnp.broadcast_to(x[None, None], fired.shape)
+    nf, cf, yf, xf, ff = (a.reshape(-1) for a in (nidx, cidx, yb, xb, fired))
+    for dy in range(K):
+        for dx in range(K):
+            ty = yf - dy + pad
+            tx = xf - dx + pad
+            ok = ff & (ty >= 0) & (ty < H) & (tx >= 0) & (tx < W)
+            contrib = w_i[dy, dx][cf] * ok[:, None].astype(jnp.int32)
+            acc = acc.at[
+                nf, jnp.clip(ty, 0, H - 1), jnp.clip(tx, 0, W - 1), :
+            ].add(contrib, mode="promise_in_bounds")
+    return acc.astype(jnp.float32) * w_scale
+
+
 def quant_matmul_ref(a_q, b_q, a_scale, b_scale):
     """Oracle for kernels.quant_matmul: exact int32 product, fp32 dequant."""
     prod = jnp.matmul(

@@ -1,0 +1,395 @@
+"""Occupancy-gated sparse spike pipeline: work proportional to events.
+
+The fused pipeline (``spike_pipeline.py``) made the event path *compiled*,
+but not *sparse*: every realization does dense work per ``(sample*step,
+channel)`` grid cell regardless of queue occupancy, so measured latency is
+flat in spike rate — the very thing the paper's event-driven argument says
+should not happen. This module is the sparse realization:
+
+1. **Event-list accumulation** (:func:`fused_spike_accum_sparse`): apply the
+   AEQ drop rule, compact the surviving events into a static-capacity event
+   list via a prefix-sum index map, and accumulate only those ``e_cap``
+   events with K² offset scatter-adds — work ∝ ``e_cap``, not ∝ feature-map
+   size. ``e_cap`` is static per compiled program; the dispatcher
+   (``engine``'s ``queue_sparse`` backend) measures the true event total
+   with :func:`kept_event_count`, pulls ONE scalar to the host, and rounds
+   up to a power-of-two bucket (:func:`event_bucket`) so the number of
+   distinct compilations stays logarithmic. This host-side *occupancy gate*
+   is how a static-shape XLA program gets measured latency that drops with
+   spike rate.
+
+2. **Occupancy-gated Pallas kernel** (:func:`fused_spike_accum_sparse_pallas`):
+   the double-buffered segment walk of ``spike_pipeline._kernel``, with
+   per-cell ``pl.when`` early-exit on empty ``(row, channel)`` cells,
+   occupancy-bounded fill/drain loops (traced ``fori_loop`` bounds instead
+   of static worst-case ones), and a ragged dispatch path that compacts the
+   ``(N, …)`` grid to only-active rows via the same prefix-sum index map
+   before kernel launch (``n_rows``).
+
+3. **Int-quantized accumulate** (``weight_bits=8``): the drain step fuses
+   the seed's ``quant_matmul`` arithmetic — int8 weights, exact integer
+   accumulation, one fp32 dequant of the accumulator — so the study's
+   ``weight_bits`` pricing axis has a measured kernel behind it.
+
+Every realization is pinned against the scatter oracle in ``kernels/ref.py``
+(bit-exact for the fp32 event list: compaction preserves the oracle's
+flattened event order, and the masked-out zero addends of the oracle cannot
+perturb a float accumulation), see ``tests/test_sparse.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.quantization import quantize_symmetric
+
+try:  # TPU scratch spaces; absent on some CPU-only builds
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - environment without pallas-tpu
+    pltpu = None
+
+
+# ---------------------------------------------------------------------------
+# The occupancy gate (host-side dispatch helpers)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def kept_event_count(occ: jnp.ndarray, *, depth: int) -> jnp.ndarray:
+    """Total events surviving the depth-``depth`` drop rule — () int32.
+
+    The one scalar the dispatcher pulls to the host to pick the event
+    bucket. Capping per (…, phase) queue at ``depth`` mirrors
+    ``aeq.compact_spikes`` exactly, so the budget can never under-count what
+    the sparse accumulator must hold.
+    """
+    tot = (occ > 0).sum(-1)
+    return jnp.minimum(tot, depth).sum().astype(jnp.int32)
+
+
+def event_bucket(n_events: int, cap: int) -> int:
+    """Round a host-side event count up to a power-of-two capacity.
+
+    Buckets keep the number of distinct ``e_cap`` specializations (and thus
+    jit compilations) logarithmic in the dynamic range of spike counts,
+    exactly like the serving runtime's padded batch buckets. ``cap`` is the
+    static worst case (every queue full), which also bounds the bucket.
+    """
+    n = max(int(n_events), 1)
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, max(int(cap), 1))
+
+
+def max_kept_events(occ_shape, depth: int) -> int:
+    """Static worst-case surviving events for an occupancy shape."""
+    n, c, k2, p = occ_shape
+    return n * c * k2 * min(depth, p)
+
+
+# ---------------------------------------------------------------------------
+# Event-list realization (compiled XLA; work proportional to e_cap)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "K", "n_win", "depth", "H", "W", "e_cap", "weight_bits"))
+def fused_spike_accum_sparse(
+    occ: jnp.ndarray,      # (N, C_in, K2, P) int32 occupancy
+    weights: jnp.ndarray,  # (K, K, C_in, C_out)
+    *,
+    K: int,
+    n_win: int,
+    depth: int,
+    H: int,
+    W: int,
+    e_cap: int,
+    weight_bits: int | None = None,
+) -> jnp.ndarray:
+    """Sparse fused compact+accumulate over an ``e_cap``-event list.
+
+    Same drop semantics as every other realization; the accumulation runs
+    over exactly ``e_cap`` compacted event slots (padded slots contribute
+    strict zeros), so the dominant cost — ``K² · e_cap`` scatter-adds of
+    C_out-wide rows — scales with occupancy instead of geometry. The caller
+    must pass ``e_cap >= kept_event_count(occ)``; the engine's dispatcher
+    guarantees it via :func:`event_bucket`.
+
+    Compaction is order-preserving over the oracle's flattened
+    ``(n, c, phase, position)`` event order and padded slots add exact
+    zeros, so the fp32 output is **bit-identical** to
+    ``ref.fused_spike_accum_ref`` (same addends, same order, same scatter
+    loop). With ``weight_bits`` the weights are symmetric-quantized to
+    integers, accumulated exactly in int32, and dequantized once in fp32 —
+    the ``quant_matmul`` contract fused into the drain step; bit-identical
+    to ``ref.fused_spike_accum_quant_ref``.
+    """
+    N, C_in, K2, P = occ.shape
+    C_out = weights.shape[-1]
+    pad = K // 2
+
+    fired = occ > 0
+    if depth < P:  # the drop rule; statically elided when no queue can fill
+        slot = jnp.cumsum(fired.astype(jnp.int32), axis=-1) - 1
+        fired = fired & (slot < depth)
+
+    # prefix-sum index map: each surviving event's slot in the compacted
+    # list (flattened row-major, i.e. the oracle's event order). Events past
+    # e_cap and non-events land in a scratch slot that is dropped.
+    keptf = fired.reshape(-1)
+    pos = jnp.cumsum(keptf.astype(jnp.int32)) - 1
+    idx = jnp.where(keptf & (pos < e_cap), pos, e_cap)
+    ev = jnp.full((e_cap + 1,), -1, jnp.int32)
+    ev = ev.at[idx].set(jnp.arange(keptf.shape[0], dtype=jnp.int32))
+    ev = ev[:e_cap]                                   # (e_cap,) flat or -1
+
+    valid = ev >= 0
+    f = jnp.maximum(ev, 0)
+    p_ = f % P
+    ph = (f // P) % K2
+    c = (f // (P * K2)) % C_in
+    n = f // (P * K2 * C_in)
+    y = (p_ // n_win) * K + ph // K
+    x = (p_ % n_win) * K + ph % K
+
+    if weight_bits is not None:
+        w_q, w_scale = quantize_symmetric(weights, weight_bits)
+        w_use = w_q.astype(jnp.int32)
+        acc = jnp.zeros((N, H, W, C_out), jnp.int32)
+        ok_dtype = jnp.int32
+    else:
+        w_use = weights
+        acc = jnp.zeros((N, H, W, C_out), weights.dtype)
+        ok_dtype = weights.dtype
+
+    for dy in range(K):
+        for dx in range(K):
+            ty = y - dy + pad
+            tx = x - dx + pad
+            ok = valid & (ty >= 0) & (ty < H) & (tx >= 0) & (tx < W)
+            contrib = w_use[dy, dx][c] * ok[:, None].astype(ok_dtype)
+            acc = acc.at[
+                n, jnp.clip(ty, 0, H - 1), jnp.clip(tx, 0, W - 1), :
+            ].add(contrib, mode="promise_in_bounds")
+
+    if weight_bits is not None:
+        return acc.astype(jnp.float32) * w_scale
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Occupancy-gated Pallas kernel (per-cell early exit + ragged row dispatch)
+# ---------------------------------------------------------------------------
+
+def _sparse_kernel(occ_ref, w_ref, tot_ref, pmax_ref, cur_ref, buf_ref, *,
+                   K, n_win, bits, depth, seg, H, W, invalid):
+    """``spike_pipeline._kernel`` with occupancy gates.
+
+    Differences from the dense-walk kernel:
+
+    - the whole fill/drain pipeline sits under ``pl.when(cell_total > 0)``,
+      so an empty ``(row, channel)`` grid cell costs only the accumulator
+      init;
+    - the fill loop walks positions ``[0, pmax)`` (the prefetched 1 + last
+      active position) instead of all P;
+    - the segment loop walks only the segments the deepest phase queue
+      actually fills (a traced ``fori_loop`` bound), instead of the static
+      worst case ``ceil(min(depth, P) / seg)``.
+    """
+    K2 = K * K
+    P = n_win * n_win
+    pad = K // 2
+    mask = (1 << bits) - 1
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        cur_ref[...] = jnp.zeros_like(cur_ref)
+
+    cell_total = tot_ref[0]
+
+    @pl.when(cell_total > 0)
+    def _work():
+        occ = occ_ref[...]                                 # (K2, P)
+        fired_all = occ > 0
+        totals = jnp.minimum(fired_all.sum(axis=1), depth)  # (K2,)
+        pmax = pmax_ref[0]
+        # segments the fullest queue actually reaches (traced bound)
+        n_seg = jax.lax.div(jnp.max(totals) + seg - 1, seg)
+
+        def fill(s, bs):
+            base = s * seg
+            pl.store(buf_ref, (pl.ds(bs, 1), slice(None), slice(None)),
+                     jnp.full((1, K2, seg), invalid, jnp.int32))
+
+            def body(p, cnt):
+                col = pl.load(occ_ref, (slice(None), pl.ds(p, 1)))[:, 0]
+                fired = col > 0
+                wy = p // n_win
+                wx = p % n_win
+                word = (wy << bits) | wx
+                for ph in range(K2):
+                    sl = cnt[ph] - base
+
+                    @pl.when(fired[ph] & (sl >= 0) & (sl < seg)
+                             & (cnt[ph] < depth))
+                    def _append():
+                        pl.store(
+                            buf_ref,
+                            (pl.ds(bs, 1), pl.ds(ph, 1),
+                             pl.ds(jnp.clip(sl, 0, seg - 1), 1)),
+                            jnp.full((1, 1, 1), word, jnp.int32))
+                return cnt + fired.astype(jnp.int32)
+
+            # only positions [0, pmax) can hold events in this cell
+            jax.lax.fori_loop(0, pmax, body, jnp.zeros((K2,), jnp.int32))
+
+        def drain(s, bs):
+            base = s * seg
+
+            def dbody(d, _):
+                for ph in range(K2):
+                    ky, kx = ph // K, ph % K
+                    word = pl.load(
+                        buf_ref, (pl.ds(bs, 1), pl.ds(ph, 1), pl.ds(d, 1))
+                    )[0, 0, 0]
+                    i_c = (word >> bits) & mask
+                    j_c = word & mask
+                    live = (base + d < totals[ph]) & (i_c < n_win)
+                    y = i_c * K + ky
+                    x = j_c * K + kx
+                    for dy in range(K):
+                        for dx in range(K):
+                            ty = y - dy + pad
+                            tx = x - dx + pad
+                            ok = (live & (ty >= 0) & (ty < H)
+                                  & (tx >= 0) & (tx < W))
+                            tyc = jnp.clip(ty, 0, H - 1)
+                            txc = jnp.clip(tx, 0, W - 1)
+                            cur = pl.load(cur_ref, (tyc, txc, slice(None)))
+                            wv = w_ref[dy, dx, :]
+                            pl.store(
+                                cur_ref, (tyc, txc, slice(None)),
+                                cur + jnp.where(ok, wv, jnp.zeros_like(wv)))
+                return 0
+
+            jax.lax.fori_loop(0, seg, dbody, 0)
+
+        fill(0, 0)
+
+        def sbody(s, _):
+            bs = jax.lax.rem(s, 2)
+
+            @pl.when(s + 1 < n_seg)
+            def _prefetch():
+                fill(s + 1, jax.lax.rem(s + 1, 2))
+
+            drain(s, bs)
+            return 0
+
+        jax.lax.fori_loop(0, n_seg, sbody, 0)
+
+
+def _default_seg(depth: int, n_win: int) -> int:
+    return max(1, min(64, depth, n_win * n_win))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "K", "n_win", "bits", "depth", "seg", "H", "W", "invalid", "n_rows",
+    "weight_bits", "interpret"))
+def fused_spike_accum_sparse_pallas(
+    occ: jnp.ndarray,      # (N, C_in, K2, P) int32 occupancy
+    weights: jnp.ndarray,  # (K, K, C_in, C_out)
+    *,
+    K: int,
+    n_win: int,
+    bits: int,
+    depth: int,
+    H: int,
+    W: int,
+    invalid: int,
+    seg: int | None = None,
+    n_rows: int | None = None,
+    weight_bits: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Occupancy-gated Pallas variant of the fused pipeline.
+
+    ``n_rows`` enables the ragged dispatch path: rows (sample*step entries)
+    of the ``(N, …)`` grid are reordered active-first via a prefix-sum index
+    map, the kernel launches on the leading ``n_rows`` only, and results are
+    scattered back — all-empty rows never even enter the grid. The caller
+    must pass ``n_rows >=`` the number of active rows (host-bucketed like
+    ``e_cap``); ``None`` keeps the full grid (per-cell gating still applies).
+
+    ``weight_bits`` fuses the int-quantized accumulate: weights are
+    symmetric-quantized, the drain accumulates the integer values exactly
+    (int8 magnitudes are exact in fp32 far beyond any feature-map fan-in),
+    and one fp32 dequant scales the result — bit-identical to
+    ``ref.fused_spike_accum_quant_ref``.
+    """
+    N, C_in, K2, P = occ.shape
+    C_out = weights.shape[-1]
+    seg = _default_seg(depth, n_win) if seg is None else min(seg, depth)
+
+    if pltpu is None and not interpret:  # pragma: no cover
+        raise RuntimeError("pallas TPU support unavailable")
+
+    w_scale = None
+    if weight_bits is not None:
+        w_q, w_scale = quantize_symmetric(weights, weight_bits)
+        weights = w_q.astype(jnp.float32)
+
+    row_order = None
+    if n_rows is not None and n_rows < N:
+        # ragged dispatch: compact active rows first (prefix-sum index map,
+        # stable, same mechanism as the event list) and launch on them only
+        row_act = (occ > 0).any((1, 2, 3))                 # (N,)
+        act_i = row_act.astype(jnp.int32)
+        pos_a = jnp.cumsum(act_i) - 1
+        pos_i = jnp.cumsum(1 - act_i) - 1 + act_i.sum()
+        slot = jnp.where(row_act, pos_a, pos_i)            # target position
+        row_order = jnp.zeros((N,), jnp.int32).at[slot].set(
+            jnp.arange(N, dtype=jnp.int32))
+        occ = occ[row_order[:n_rows]]
+        N_run = n_rows
+    else:
+        N_run = N
+
+    # per-(row, channel) gate scalars: total events and 1 + last active
+    # position (the fill-loop bound)
+    fired_any = occ > 0
+    cell_tot = fired_any.sum((-1, -2)).astype(jnp.int32)   # (N_run, C_in)
+    p_idx = jnp.arange(P, dtype=jnp.int32)
+    cell_pmax = jnp.max(
+        jnp.where(fired_any.any(-2), p_idx[None, None] + 1, 0), -1
+    ).astype(jnp.int32)                                    # (N_run, C_in)
+
+    scratch = ([pltpu.VMEM((2, K2, seg), jnp.int32)] if pltpu is not None
+               else [jax.ShapeDtypeStruct((2, K2, seg), jnp.int32)])
+
+    out = pl.pallas_call(
+        functools.partial(_sparse_kernel, K=K, n_win=n_win, bits=bits,
+                          depth=depth, seg=seg, H=H, W=W, invalid=invalid),
+        grid=(N_run, C_in),
+        in_specs=[
+            pl.BlockSpec((None, None, K2, P), lambda n, c: (n, c, 0, 0)),
+            pl.BlockSpec((K, K, None, C_out), lambda n, c: (0, 0, c, 0)),
+            pl.BlockSpec((None, None, 1), lambda n, c: (n, c, 0)),
+            pl.BlockSpec((None, None, 1), lambda n, c: (n, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, H, W, C_out), lambda n, c: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N_run, H, W, C_out), weights.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(occ, weights, cell_tot[..., None], cell_pmax[..., None])
+
+    if row_order is not None:
+        # scatter the active-row results back into the full (N, …) output;
+        # rows beyond n_rows were all-empty, so zeros are exact
+        full = jnp.zeros((N, H, W, C_out), out.dtype)
+        out = full.at[row_order[:N_run]].set(out)
+    if w_scale is not None:
+        out = out * w_scale
+    return out

@@ -64,6 +64,12 @@ def batch_runner_sharded(cfg, backend_name: str, mesh: Mesh):
     if cached is not None:
         return cached
 
+    if getattr(engine.get_backend(backend_name), "host_dispatch", False):
+        raise ValueError(
+            f"backend {backend_name!r} dispatches on host-side occupancy "
+            "totals and cannot be traced into one shard_map program; "
+            "infer_batch_sharded falls back to the local runner for it")
+
     backend = engine.get_backend(backend_name)
     plan = engine.compile_plan(cfg.spec, cfg.input_hw, cfg.input_c,
                                cfg.compressed)
@@ -100,6 +106,13 @@ def infer_batch_sharded(params, thresholds, cfg, images, *,
     compute but never exactness.
     """
     mesh = data_mesh() if mesh is None else mesh
+    if getattr(engine.get_backend(backend), "host_dispatch", False):
+        # Occupancy-gated backends (queue_sparse) pick their event bucket
+        # from a host-side scalar between layers — untraceable under
+        # shard_map. The local runner is bit-exact (same mask contract), so
+        # inside use_mesh() these backends transparently run unsharded.
+        return engine._runner(cfg, backend, True)(params, tuple(thresholds),
+                                                  images)
     n = mesh_size(mesh)
     if n <= 1:
         return engine._runner(cfg, backend, True)(params, tuple(thresholds),

@@ -32,7 +32,12 @@ class ModelHandle:
     def __init__(self, name: str, params, thresholds, cfg, *,
                  backend: str = "queue_pallas", vmem_resident: bool = True,
                  plan_cache_size: int = 8, mesh=None):
-        engine.get_backend(backend)          # fail fast on unknown names
+        b = engine.get_backend(backend)      # fail fast on unknown names
+        if getattr(b, "host_dispatch", False):
+            raise ValueError(
+                f"backend {backend!r} dispatches on host-side occupancy "
+                "totals, so its plan cannot be AOT-lowered per bucket; "
+                "serve with 'queue_pallas' (same semantics, static plan)")
         if plan_cache_size < 1:
             raise ValueError(                # 0 would recompile every batch
                 f"plan_cache_size must be >= 1, got {plan_cache_size}")

@@ -20,9 +20,16 @@ train                   dataset, net, input_hw/c, n_train, train_seed,
 convert                 percentile, n_calib, balance (+ T, mode, input_mode,
                         input_theta, v_init_frac when balance=True)
 collect                 T, depth, mode, input_mode, input_theta, v_init_frac,
-                        backend, batch, n_eval, eval_seed
+                        backend, batch, n_eval, eval_seed (+ weight_bits on
+                        the backends that execute it — see below)
 price (never cached)    compressed, vmem_resident, weight_bits
 ======================  =====================================================
+
+``weight_bits`` is a pure pricing axis on most backends, but the sparse
+realization (``backend='queue_sparse'``, ref-anchored by ``queue_ref``)
+*executes* it — int-quantized conv accumulate + int8 output head — so for
+those backends it also keys the collect cache
+(:meth:`StudySpec.executed_weight_bits`).
 
 ``compressed`` deliberately does *not* key the collect stage: the AE word
 format only changes how many bits a stored event occupies (Sec. 5.2), never
@@ -161,14 +168,27 @@ class StudySpec:
         return dataclasses.replace(self, **changes)
 
     def snn_config(self):
-        """The engine :class:`SNNConfig` this spec executes under."""
+        """The engine :class:`SNNConfig` this spec executes under.
+
+        ``weight_bits`` reaches the engine only for the backends whose event
+        path honors it (``queue_sparse``'s int-quantized accumulate and its
+        ``queue_ref`` parity anchor); for every other backend it stays a
+        pure pricing axis and the executed config keeps fp32 weights, so the
+        collect cache is shared across the ``weight_bits`` sweep there.
+        """
         from ..core.snn_model import SNNConfig
 
         return SNNConfig(
             spec=self.net, input_hw=self.input_hw, input_c=self.input_c,
             T=self.T, mode=self.mode, depth=self.depth,
             compressed=self.compressed, input_mode=self.input_mode,
-            input_theta=self.input_theta, v_init_frac=self.v_init_frac)
+            input_theta=self.input_theta, v_init_frac=self.v_init_frac,
+            weight_bits=self.executed_weight_bits())
+
+    def executed_weight_bits(self) -> int | None:
+        """The weight width the engine will actually execute (None = fp32)."""
+        return (self.weight_bits
+                if self.backend in ("queue_sparse", "queue_ref") else None)
 
     def _check_registered(self):
         from ..data.synthetic import DATASETS

@@ -203,10 +203,15 @@ def collect(spec: StudySpec, converted: ConvertArtifact | None = None, *,
     else:
         images = jnp.asarray(images)
 
+    # v2: the key gained the *executed* weight width — None on backends
+    # where weight_bits is purely a pricing axis (cache still shared across
+    # that sweep), the real width on queue_sparse/queue_ref, whose logits
+    # depend on it
     key = content_key(
-        "collect-v1", converted.key, spec.net, spec.input_hw, spec.input_c,
+        "collect-v2", converted.key, spec.net, spec.input_hw, spec.input_c,
         spec.T, spec.depth, spec.mode, spec.input_mode, spec.input_theta,
-        spec.v_init_frac, spec.backend, spec.batch, images)
+        spec.v_init_frac, spec.backend, spec.batch,
+        spec.executed_weight_bits(), images)
 
     def build():
         stage_counts["collect"] += 1

@@ -42,15 +42,26 @@ def test_spike_compact_sweep(rows, n_win, depth):
 @pytest.mark.parametrize("m,k,n", [(16, 32, 8), (100, 200, 60), (128, 128, 128),
                                    (130, 257, 64)])
 def test_quant_matmul_sweep(m, k, n):
+    # backend pinned: the *default* resolves to 'ref' off-TPU
+    # (ops.default_quant_impl), which would make this Pallas-vs-oracle
+    # differential a tautology
     rng = np.random.default_rng(m + k + n)
     a = rng.integers(-127, 127, (m, k)).astype(np.int8)
     b = rng.integers(-127, 127, (k, n)).astype(np.int8)
     got = ops.quant_matmul(jnp.asarray(a), jnp.asarray(b),
                            jnp.float32(0.013), jnp.float32(0.021),
-                           block_m=64, block_n=64, block_k=64)
+                           backend="pallas", block_m=64, block_n=64,
+                           block_k=64)
     want = ref.quant_matmul_ref(jnp.asarray(a), jnp.asarray(b),
                                 jnp.float32(0.013), jnp.float32(0.021))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_quant_matmul_default_is_compiled():
+    """The engine's quant output head must never hit the interpreter."""
+    assert ops.default_quant_impl() in ("pallas", "ref")
+    if jax.default_backend() != "tpu":
+        assert ops.default_quant_impl() == "ref"
 
 
 @pytest.mark.parametrize("t,d,s", [(16, 8, 12), (64, 32, 50), (10, 128, 40)])

@@ -1,0 +1,453 @@
+"""The occupancy-gated sparse realization, pinned against the scatter oracle.
+
+Layered the same way the implementation is:
+
+- **kernel level**: ``fused_spike_accum(impl='sparse')`` is *bit-exact*
+  (``assert_array_equal``, not allclose) against the ``kernels/ref.py``
+  oracle — the prefix-sum compaction preserves the oracle's flattened event
+  order and padded slots add exact zeros — across shapes, small-depth
+  overflow regimes, the edge rates 0.0 (all-zero occupancy) and 1.0
+  (saturated), and exact (non-power-of-two) ``e_cap``. The int-quantized
+  path is pinned the same way against ``fused_spike_accum_quant_ref``
+  (integer accumulation is exact on both sides, so equality is exact).
+- **drop parity**: the sparse path keeps/drops exactly the events
+  ``aeq.compact_spikes`` would — same kept totals, same dropped count, same
+  accumulated charge.
+- **Pallas body**: the ``pl.when``-gated kernel with the ragged row grid,
+  run under the interpreter; a small always-on case plus an env-gated
+  broader sweep (``REPRO_PALLAS_INTERPRET_TESTS=1``, the dedicated CI leg).
+- **engine level**: ``backend='queue_sparse'`` is bit-exact vs
+  ``queue_ref`` — logits AND every SNNStats field — across neuron modes ×
+  input encodings × B ∈ {1, 3, 16}, including overflow at small depth, the
+  batch-padding mask contract, and the executed ``weight_bits`` path.
+- **composition**: ``repro.parallel`` falls back (bit-exact) instead of
+  tracing the host-dispatch backend into shard_map; ``repro.serve``
+  rejects it; the study layer threads ``executed_weight_bits`` and a
+  ``weight_bits=8`` queue_sparse cell really dispatches the quant kernel.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core import aeq, encoding, engine, neuron, snn_model
+from repro.kernels import ops, ref
+from repro.kernels import spike_sparse as sps
+
+SPEC = "6C3-P2-4C3-8"
+HW, C = 10, 1
+
+interpret_leg = pytest.mark.skipif(
+    os.environ.get("REPRO_PALLAS_INTERPRET_TESTS", "") != "1",
+    reason="slow Pallas-interpreter sweep: set REPRO_PALLAS_INTERPRET_TESTS=1")
+
+
+def _occupancy(hw, c_in, n, seed, p_fire=0.25):
+    """Random (N, C, K2, P) occupancy via the real raster->phase split."""
+    rng = np.random.default_rng(seed)
+    raster = (rng.random((n, hw, hw, c_in)) < p_fire).astype(np.float32)
+    fmt = encoding.make_format(hw, 3)
+    return fmt, aeq.phase_occupancy(fmt, jnp.asarray(raster))
+
+
+def _weights(c_in, c_out, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(3, 3, c_in, c_out)), jnp.float32)
+
+
+def _kw(fmt, hw, depth):
+    return dict(K=3, n_win=fmt.n_win, bits=fmt.bits_coord, depth=depth,
+                H=hw, W=hw, invalid=fmt.invalid_word)
+
+
+def _gate(occ, depth):
+    """The dispatcher's occupancy gate, exactly as the engine runs it."""
+    return sps.event_bucket(int(sps.kept_event_count(occ, depth=depth)),
+                            sps.max_kept_events(occ.shape, depth))
+
+
+def _stats_equal(a, b, msg=""):
+    for f in ("events_in", "spikes_out", "add_ops", "queue_words",
+              "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}: stats.{f}")
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: the event-list realization vs the scatter oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw,c_in,c_out,depth", [
+    (9, 1, 8, 16), (12, 3, 16, 4), (28, 4, 32, 64), (10, 2, 8, 2),
+])
+def test_sparse_matches_ref_bit_exact(hw, c_in, c_out, depth):
+    """Compaction preserves the oracle's event order; padded slots add exact
+    zeros -> the fp32 output is bit-identical, incl. small-depth drops and
+    the non-compressed word format (hw=10)."""
+    fmt, occ = _occupancy(hw, c_in, 3, seed=hw * depth)
+    w = _weights(c_in, c_out)
+    kw = _kw(fmt, hw, depth)
+    out_s = ops.fused_spike_accum(occ, w, impl="sparse",
+                                  e_cap=_gate(occ, depth), **kw)
+    out_r = ops.fused_spike_accum(occ, w, impl="ref", **kw)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_r))
+
+
+def test_sparse_exact_e_cap_and_bucketing_equivalent():
+    """Any e_cap >= the true kept count gives the same answer: the exact
+    (non-power-of-two) budget, the bucketed one, and the worst case."""
+    fmt, occ = _occupancy(12, 2, 2, seed=5)
+    w = _weights(2, 8)
+    kw = _kw(fmt, 12, 16)
+    kept = int(sps.kept_event_count(occ, depth=16))
+    assert kept > 0 and kept & (kept - 1) != 0  # genuinely non-power-of-two
+    outs = [ops.fused_spike_accum(occ, w, impl="sparse", e_cap=cap, **kw)
+            for cap in (kept, _gate(occ, 16),
+                        sps.max_kept_events(occ.shape, 16))]
+    for other in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(other))
+
+
+@pytest.mark.parametrize("rate", [0.0, 1.0])
+@pytest.mark.parametrize("depth", [3, 64])
+def test_sparse_edge_rates(rate, depth):
+    """All-zero occupancy (gate collapses to e_cap=1, output is exact zeros)
+    and saturated occupancy (every queue full; depth=3 forces drops on every
+    (c, phase) segment) both match the oracle bit-exactly."""
+    hw, c_in, c_out = 9, 2, 8
+    fmt, occ = _occupancy(hw, c_in, 2, seed=7, p_fire=rate)
+    w = _weights(c_in, c_out)
+    kw = _kw(fmt, hw, depth)
+    e_cap = _gate(occ, depth)
+    if rate == 0.0:
+        assert int(sps.kept_event_count(occ, depth=depth)) == 0
+        assert e_cap == 1  # the floor bucket: nothing to do, minimal program
+    else:
+        # saturated: the kept count IS the static worst case, bucket clamps
+        assert int(sps.kept_event_count(occ, depth=depth)) == \
+            sps.max_kept_events(occ.shape, depth)
+        assert e_cap == sps.max_kept_events(occ.shape, depth)
+    out_s = ops.fused_spike_accum(occ, w, impl="sparse", e_cap=e_cap, **kw)
+    out_r = ops.fused_spike_accum(occ, w, impl="ref", **kw)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_r))
+    if rate == 0.0:
+        assert not np.asarray(out_s).any()
+
+
+def test_sparse_drop_parity_vs_compact_spikes():
+    """At tiny depth the sparse path keeps/drops exactly the events the
+    word-level queue encoder keeps/drops: same kept total per queue, same
+    dropped count, same accumulated charge."""
+    hw, c_out, depth = 12, 4, 2
+    rng = np.random.default_rng(21)
+    spike_map = (rng.random((hw, hw)) < 0.5).astype(np.float32)
+    fmt = encoding.make_format(hw, 3)
+    occ = aeq.phase_occupancy(fmt, jnp.asarray(spike_map)[None, :, :, None])
+    words, counts, dropped = aeq.compact_spikes(fmt, jnp.asarray(spike_map),
+                                                depth)
+
+    kept = int(sps.kept_event_count(occ, depth=depth))
+    total = int((np.asarray(occ) > 0).sum())
+    assert kept == int(counts.sum())
+    assert total - kept == int(dropped) and int(dropped) > 0
+
+    w = _weights(1, c_out)
+    out_s = ops.fused_spike_accum(occ, w, impl="sparse",
+                                  e_cap=_gate(occ, depth),
+                                  **_kw(fmt, hw, depth))[0]
+    vm = jnp.zeros((hw, hw, c_out), jnp.float32)
+    out_q = ref.event_accum_ref(words[None], counts[None], w, vm, K=3,
+                                n_win=fmt.n_win, bits=fmt.bits_coord)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_q),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("hw,c_in,c_out,depth", [
+    (9, 1, 8, 16), (12, 3, 16, 4), (10, 2, 8, 2),
+])
+def test_sparse_quant_matches_quant_ref_bit_exact(hw, c_in, c_out, depth):
+    """weight_bits=8: int8 weights, exact integer accumulation, one fp32
+    dequant — bit-identical to the quant oracle (integer-valued adds are
+    order-independent in fp32), and actually different from the fp32 path
+    (proof the quantization executed)."""
+    fmt, occ = _occupancy(hw, c_in, 2, seed=hw + depth)
+    w = _weights(c_in, c_out)
+    kw = _kw(fmt, hw, depth)
+    out_s = ops.fused_spike_accum(occ, w, impl="sparse", weight_bits=8,
+                                  e_cap=_gate(occ, depth), **kw)
+    out_r = ops.fused_spike_accum(occ, w, impl="ref", weight_bits=8, **kw)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_r))
+    out_fp32 = ops.fused_spike_accum(occ, w, impl="ref", **kw)
+    assert not np.array_equal(np.asarray(out_s), np.asarray(out_fp32))
+
+
+def test_sparse_requires_e_cap():
+    fmt, occ = _occupancy(9, 1, 1, seed=0)
+    with pytest.raises(ValueError, match="e_cap"):
+        ops.fused_spike_accum(occ, _weights(1, 4), impl="sparse",
+                              **_kw(fmt, 9, 16))
+
+
+def test_event_bucket_and_cap():
+    assert sps.event_bucket(0, 4096) == 1      # empty batch -> floor bucket
+    assert sps.event_bucket(1, 4096) == 1
+    assert sps.event_bucket(3, 4096) == 4
+    assert sps.event_bucket(129, 4096) == 256
+    assert sps.event_bucket(10**9, 4096) == 4096   # clamped to worst case
+    assert sps.max_kept_events((2, 3, 9, 16), 4) == 2 * 3 * 9 * 4
+    assert sps.max_kept_events((2, 3, 9, 16), 64) == 2 * 3 * 9 * 16
+
+
+# ---------------------------------------------------------------------------
+# The occupancy-gated Pallas kernel body (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_sparse_pallas_interp_small():
+    """pl.when gating + occupancy-bounded drain, one small always-on case
+    (rows 0 and 2 empty so the ragged n_rows path compacts the grid)."""
+    hw, c_in, c_out, depth = 6, 1, 4, 8
+    fmt, occ = _occupancy(hw, c_in, 4, seed=13)
+    occ = occ.at[0].set(0).at[2].set(0)
+    w = _weights(c_in, c_out)
+    kw = _kw(fmt, hw, depth)
+    out_r = ops.fused_spike_accum(occ, w, impl="ref", **kw)
+    for n_rows in (None, 2):
+        out_p = ops.fused_spike_accum(occ, w, impl="sparse_pallas_interpret",
+                                      n_rows=n_rows, **kw)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@interpret_leg
+@pytest.mark.parametrize("hw,c_in,c_out,depth,n_rows,wb", [
+    (9, 2, 8, 4, None, None),     # small-depth drops
+    (10, 1, 8, 3, 2, None),       # non-compressed words + ragged grid
+    (12, 2, 16, 16, None, 8),     # quantized drain
+    (28, 2, 16, 64, 3, None),     # paper-scale geometry, ragged
+])
+def test_sparse_pallas_interp_sweep(hw, c_in, c_out, depth, n_rows, wb):
+    """The env-gated CI leg: broader shapes through the interpreter."""
+    fmt, occ = _occupancy(hw, c_in, 4, seed=hw * depth)
+    if n_rows is not None:  # make exactly n_rows rows active
+        for i in range(n_rows, 4):
+            occ = occ.at[i].set(0)
+    w = _weights(c_in, c_out)
+    kw = _kw(fmt, hw, depth)
+    out_p = ops.fused_spike_accum(occ, w, impl="sparse_pallas_interpret",
+                                  n_rows=n_rows, weight_bits=wb, **kw)
+    out_r = ops.fused_spike_accum(occ, w, impl="ref", weight_bits=wb, **kw)
+    if wb is not None:  # integer accumulation: exact on both sides
+        np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_r))
+    else:
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul: property test vs jnp.matmul (satellite)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(st.integers(1, 48), st.integers(1, 48), st.integers(1, 24),
+       st.integers(0, 2**31 - 1))
+def test_quant_matmul_property(m, k, n, seed):
+    """Dequantized int8 matmul == the float matmul of the dequantized
+    operands, for arbitrary shapes (default backend: exact int32 path)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    b = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    got = ops.quant_matmul(jnp.asarray(a), jnp.asarray(b),
+                           jnp.float32(0.007), jnp.float32(0.05))
+    want = (a.astype(np.float32) * 0.007) @ (b.astype(np.float32) * 0.05)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: queue_sparse vs the queue_ref parity anchor
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def net():
+    params = snn_model.init_params(jax.random.PRNGKey(7), SPEC, HW, C)
+    th = [jnp.asarray(0.5)] * len(engine.parse_spec(SPEC))
+    imgs = jnp.asarray(
+        np.random.default_rng(11).random((16, HW, HW, C)), jnp.float32)
+    return params, th, imgs
+
+
+def test_sparse_backend_is_registered_and_flagged():
+    b = engine.get_backend("queue_sparse")
+    assert b.supports_batch is True
+    assert b.host_dispatch is True
+    assert engine.get_backend("queue_ref").supports_batch is True
+    assert not getattr(engine.get_backend("queue_pallas"),
+                       "host_dispatch", False)
+
+
+@pytest.mark.parametrize("mode", neuron.MODES)
+@pytest.mark.parametrize("input_mode", ["analog", "binary"])
+def test_engine_sparse_vs_ref_all_modes(net, make_snn_config, mode,
+                                        input_mode):
+    """Bit-exact logits and stats vs the oracle backend, every neuron mode x
+    input encoding (analog exercises the dense first-layer branch)."""
+    params, th, imgs = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, mode=mode, input_mode=input_mode)
+    ls, ss = engine.infer_batch(params, th, cfg, imgs[:3],
+                                backend="queue_sparse")
+    lr, sr = engine.infer_batch(params, th, cfg, imgs[:3],
+                                backend="queue_ref")
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lr))
+    _stats_equal(ss, sr, msg=f"{mode}/{input_mode}")
+
+
+@pytest.mark.parametrize("B", [1, 3, 16])
+def test_engine_sparse_batch_sizes(net, make_snn_config, B):
+    """Every batch size: bit-exact vs queue_ref, float-close vs dense, and
+    row 0 of the batch == the single-sample path (batch-of-one delegate)."""
+    params, th, imgs = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, mode="mttfs_cont",
+                          input_mode="binary")
+    ls, ss = engine.infer_batch(params, th, cfg, imgs[:B],
+                                backend="queue_sparse")
+    lr, sr = engine.infer_batch(params, th, cfg, imgs[:B],
+                                backend="queue_ref")
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lr))
+    _stats_equal(ss, sr, msg=f"B={B}")
+    ld, _ = engine.infer_batch(params, th, cfg, imgs[:B], backend="dense")
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(ld),
+                               atol=1e-4, rtol=1e-4)
+    l1, s1 = engine.infer(params, th, cfg, imgs[0], backend="queue_sparse")
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(ls[0]))
+    np.testing.assert_array_equal(np.asarray(s1.overflow),
+                                  np.asarray(ss.overflow[0]))
+
+
+def test_engine_sparse_overflow_regime(net, make_snn_config):
+    """depth=2 forces drops; the sparse path drops the SAME events."""
+    params, th, imgs = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, depth=2, mode="mttfs_cont",
+                          input_mode="binary")
+    ls, ss = engine.infer_batch(params, th, cfg, imgs[:3],
+                                backend="queue_sparse")
+    lr, sr = engine.infer_batch(params, th, cfg, imgs[:3],
+                                backend="queue_ref")
+    assert int(np.asarray(ss.overflow).sum()) > 0  # regime is real
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lr))
+    _stats_equal(ss, sr, msg="overflow regime")
+
+
+def test_engine_sparse_mask_contract(net, make_snn_config):
+    """Padding the batch with junk rows changes the event bucket but must
+    not perturb the valid rows — bit-exact row for row."""
+    params, th, imgs = net
+    cfg = make_snn_config(SPEC, HW, C, T=3, mode="mttfs_cont",
+                          input_mode="binary")
+    l3, s3 = engine.infer_batch(params, th, cfg, imgs[:3],
+                                backend="queue_sparse")
+    l8, s8 = engine.infer_batch(params, th, cfg, imgs[:8],
+                                backend="queue_sparse")
+    np.testing.assert_array_equal(np.asarray(l3), np.asarray(l8[:3]))
+    for f in ("events_in", "spikes_out", "add_ops", "queue_words",
+              "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(s3, f)),
+                                      np.asarray(getattr(s8, f))[:3],
+                                      err_msg=f"stats.{f}")
+
+
+def test_engine_sparse_quant_weight_bits(net, make_snn_config):
+    """cfg.weight_bits=8 is *executed* on queue_sparse/queue_ref: bit-exact
+    between them, visibly different from the fp32 logits."""
+    params, th, imgs = net
+    mk = dict(T=3, mode="mttfs_cont", input_mode="binary")
+    cfg_q = make_snn_config(SPEC, HW, C, weight_bits=8, **mk)
+    cfg_f = make_snn_config(SPEC, HW, C, **mk)
+    lq, sq = engine.infer_batch(params, th, cfg_q, imgs[:3],
+                                backend="queue_sparse")
+    lr, sr = engine.infer_batch(params, th, cfg_q, imgs[:3],
+                                backend="queue_ref")
+    np.testing.assert_array_equal(np.asarray(lq), np.asarray(lr))
+    _stats_equal(sq, sr, msg="weight_bits=8")
+    lf, _ = engine.infer_batch(params, th, cfg_f, imgs[:3],
+                               backend="queue_sparse")
+    assert not np.array_equal(np.asarray(lq), np.asarray(lf))
+
+
+# ---------------------------------------------------------------------------
+# Composition: parallel fallback, serve rejection, study wiring
+# ---------------------------------------------------------------------------
+
+def test_parallel_falls_back_bit_exact(net, make_snn_config):
+    """shard_map cannot trace host-side dispatch: batch_runner_sharded
+    refuses, infer_batch_sharded transparently runs the local runner and is
+    bit-exact against a plain engine call."""
+    from repro import parallel
+
+    params, th, imgs = net
+    cfg = make_snn_config(SPEC, HW, C, T=2, mode="mttfs_cont",
+                          input_mode="binary")
+    mesh = parallel.data_mesh()
+    with pytest.raises(ValueError, match="host-side occupancy"):
+        parallel.batch_runner_sharded(cfg, "queue_sparse", mesh)
+    lm, sm = parallel.infer_batch_sharded(params, th, cfg, imgs[:4],
+                                          backend="queue_sparse", mesh=mesh)
+    le, se = engine.infer_batch(params, th, cfg, imgs[:4],
+                                backend="queue_sparse")
+    np.testing.assert_array_equal(np.asarray(lm), np.asarray(le))
+    _stats_equal(sm, se, msg="sharded fallback")
+    # and inside use_mesh() the engine front door takes the same fallback
+    with parallel.use_mesh(mesh):
+        lu, su = engine.infer_batch(params, th, cfg, imgs[:4],
+                                    backend="queue_sparse")
+    np.testing.assert_array_equal(np.asarray(lu), np.asarray(le))
+    _stats_equal(su, se, msg="use_mesh fallback")
+
+
+def test_serve_rejects_host_dispatch_backend(net, make_snn_config):
+    from repro.serve.registry import ModelHandle
+
+    params, th, _ = net
+    cfg = make_snn_config(SPEC, HW, C, T=2)
+    with pytest.raises(ValueError, match="AOT"):
+        ModelHandle("m", params, th, cfg, backend="queue_sparse")
+
+
+def test_spec_threads_executed_weight_bits():
+    from repro.study import StudySpec
+
+    base = dict(dataset="mnist", net="6C3-P2-8", input_hw=28, input_c=1,
+                weight_bits=8)
+    sparse = StudySpec(backend="queue_sparse", **base)
+    assert sparse.executed_weight_bits() == 8
+    assert sparse.snn_config().weight_bits == 8
+    dense = StudySpec(backend="dense", **base)
+    assert dense.executed_weight_bits() is None  # pricing-only axis
+    assert dense.snn_config().weight_bits is None
+    assert engine.get_backend("queue_ref")  # the anchor also executes it
+    assert StudySpec(backend="queue_ref",
+                     **base).executed_weight_bits() == 8
+
+
+def test_study_cell_dispatches_sparse_quant_kernels():
+    """A weight_bits=8 queue_sparse study cell really runs the sparse fused
+    kernel and the int8 output head (dispatch counters, not just configs)."""
+    from repro import study as study_api
+    from repro.study import StudyCache, StudySpec
+
+    # binary input: layer 0 consumes a raster, so the *sparse fused kernel*
+    # runs (analog first layers take the dense branch by design)
+    spec = StudySpec(dataset="mnist", net="6C3-P2-8", input_hw=28,
+                     input_c=1, n_train=96, epochs=1, n_eval=8, n_calib=32,
+                     n_balance=16, T=2, depth=64, batch=8,
+                     input_mode="binary", backend="queue_sparse",
+                     weight_bits=8)
+    before = dict(ops.dispatch_counts)
+    collected = study_api.collect(spec, cache=StudyCache())
+    after = ops.dispatch_counts
+    assert after["fused:sparse"] > before.get("fused:sparse", 0)
+    assert (after["quant_matmul:" + ops.default_quant_impl()]
+            > before.get("quant_matmul:" + ops.default_quant_impl(), 0))
+    assert collected.snn_logits.shape[0] == spec.n_eval
