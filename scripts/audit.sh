@@ -1,0 +1,28 @@
+#!/bin/sh
+# Contract-audit gate (docs/CONTRACTS.md) — the same check CI's `audit` job
+# runs. Usable directly or as a pre-commit hook:
+#
+#     ln -s ../../scripts/audit.sh .git/hooks/pre-commit
+#
+# By default runs the AST/reachability layer only (milliseconds — right for
+# a hook). Set AUDIT_FULL=1 to also trace every backend and run the jaxpr
+# rules, exactly like CI.
+set -eu
+
+root=$(cd "$(dirname "$0")/.." && pwd)
+cd "$root"
+
+if [ "${AUDIT_FULL:-0}" = "1" ]; then
+    flags="--strict"
+else
+    flags="--strict --no-trace"
+fi
+
+# shellcheck disable=SC2086  # flags is a deliberate word list
+PYTHONPATH="$root/src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.audit $flags || {
+    echo >&2 "audit: contract violations found (see above)."
+    echo >&2 "audit: fix them, or baseline a warning with" \
+        "'python -m repro.audit --write-baseline' + a justification."
+    exit 1
+}

@@ -24,7 +24,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+try:
+    from repro.audit import gh_summary
+except ImportError:  # standalone run without PYTHONPATH=src
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.audit import gh_summary
 
 
 def load_rows(path: str) -> dict:
@@ -94,41 +102,45 @@ def check_sparse_sweep(new: dict):
 
 def markdown_report(args, comparisons, regressions, warnings, skipped,
                     only_one) -> str:
-    lines = ["## Bench regression gate", "",
-             f"baseline `{args.baseline}` vs new `{args.new}` — "
-             f"{len(comparisons)} timed rows compared, gate at "
-             f">{args.fail_ratio:g}× (warn at >{args.warn_ratio:g}×; the box "
-             "is load-noisy, small ratios are weather)", ""]
+    def table(rows):
+        return gh_summary.markdown_table(
+            ["bench", "baseline µs", "new µs", "ratio"],
+            [[n, f"{b:.1f}", f"{v:.1f}", f"{r:.2f}×"]
+             for n, b, v, r in rows])
 
-    def table(rows, title, mark):
-        out = [f"### {mark} {title}", "",
-               "| bench | baseline µs | new µs | ratio |", "|---|---|---|---|"]
-        out += [f"| {n} | {b:.1f} | {v:.1f} | {r:.2f}× |"
-                for n, b, v, r in rows]
-        return out + [""]
-
-    if regressions:
-        lines += table(regressions, "Regressions (gate failed)", "❌")
-    if warnings:
-        lines += table(warnings, "Above warn threshold (non-fatal)", "⚠️")
+    verdict = (f"baseline `{args.baseline}` vs new `{args.new}` — "
+               f"{len(comparisons)} timed rows compared, gate at "
+               f">{args.fail_ratio:g}× (warn at >{args.warn_ratio:g}×; the "
+               "box is load-noisy, small ratios are weather)")
     if not regressions and not warnings:
-        lines += ["✅ no row above the warn threshold", ""]
+        verdict += "\n\n✅ no row above the warn threshold"
+
+    sections = []
+    if regressions:
+        sections.append(("❌ Regressions (gate failed)", table(regressions)))
+    if warnings:
+        sections.append(("⚠️ Above warn threshold (non-fatal)",
+                         table(warnings)))
     improved = [c for c in comparisons if c[3] < 1 / args.warn_ratio]
     if improved:
-        lines += table(improved, "Improvements", "🏎️")
+        sections.append(("🏎️ Improvements", table(improved)))
     new_only = [n for n, side in only_one if side == "new only"]
     base_only = [n for n, side in only_one if side == "baseline only"]
     if new_only:
-        lines += ["### Rows not in the baseline (new benches?)", ""]
-        lines += [f"- `{n}`" for n in new_only] + [""]
+        sections.append(("Rows not in the baseline (new benches?)",
+                         "\n".join(f"- `{n}`" for n in new_only)))
+    notes = []
     if base_only:
         # a CI snapshot is usually a --only subset of the full committed
         # baseline, so baseline-only rows are expected — count, don't list
-        lines += [f"_{len(base_only)} baseline row(s) not in the new "
-                  "snapshot (expected when the new run used --only)_", ""]
+        notes.append(f"_{len(base_only)} baseline row(s) not in the new "
+                     "snapshot (expected when the new run used --only)_")
     if skipped:
-        lines += [f"_{len(skipped)} row(s) skipped (untimed/error)_", ""]
-    return "\n".join(lines)
+        notes.append(f"_{len(skipped)} row(s) skipped (untimed/error)_")
+    if notes:
+        sections.append(("Notes", "\n".join(notes)))
+    return gh_summary.render_report("Bench regression gate", verdict,
+                                    sections)
 
 
 def main(argv=None) -> int:
@@ -157,10 +169,7 @@ def main(argv=None) -> int:
         report += "\n### Sparse rate-sweep shape gate\n\n" + "\n".join(
             [f"- ❌ {e}" for e in sweep_errors]
             + [f"- ⚠️ {w}" for w in sweep_warns]) + "\n"
-    print(report)
-    if args.summary:
-        with open(args.summary, "a") as f:
-            f.write(report + "\n")
+    gh_summary.emit(report, args.summary)
 
     if regressions or sweep_errors:
         for e in sweep_errors:

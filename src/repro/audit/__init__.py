@@ -1,0 +1,29 @@
+"""repro.audit — static contract checker for the repo's invariants.
+
+Two layers (see ``docs/CONTRACTS.md`` for the full invariant list):
+
+1. **jaxpr auditor** (``probe`` + ``jaxpr_rules`` + ``vmem`` + ``harness``):
+   traces every registered backend's batched plan and each Pallas kernel,
+   then verifies the declared ``CONTRACT`` descriptors — dtype discipline,
+   the int8 -> int32 -> single-dequant quant path, host-sync freedom inside
+   jit, batch-axis purity (the mask contract, structurally), Pallas VMEM
+   budgets, and jit-cache flatness.
+2. **AST lint** (``ast_rules`` + ``reachability``): repo-specific source
+   bans — f64, numpy-in-jit, vmap-over-queue, reverse imports from tests/
+   benchmarks, unmarked host syncs — plus an import-reachability graph that
+   flags dead modules.
+
+CLI: ``python -m repro.audit [--strict] [--no-trace]``; findings are
+``file:line``-anchored, severity-tagged, and gated against the committed
+``audit_baseline.json`` (every accepted finding carries a justification).
+"""
+from .contracts import (BackendContract, KernelContract, QuantContract,
+                        VMEM_BUDGET_BYTES)
+from .findings import Baseline, BaselineError, Finding
+from .gh_summary import emit, markdown_table, render_report
+
+__all__ = [
+    "BackendContract", "KernelContract", "QuantContract",
+    "VMEM_BUDGET_BYTES", "Baseline", "BaselineError", "Finding",
+    "emit", "markdown_table", "render_report",
+]

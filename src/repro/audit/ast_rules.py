@@ -1,0 +1,212 @@
+"""Layer-2 rules: AST lint over ``src/`` with repo-specific bans.
+
+These rules are purely syntactic (no imports, no tracing), so they run in
+milliseconds and catch hazards the jaxpr layer cannot see — code that only
+executes on TPU, on rare branches, or in modules the probe never traces.
+
+Rules (all anchored at the offending ``file:line``):
+
+- ``ast-f64``          ``float64``/``complex128`` anywhere in ``src/`` —
+                       the repo is strictly single-precision.
+- ``ast-np-in-jit``    ``np.``/``numpy.`` calls inside a jit-decorated
+                       function: host math inside a traced path either
+                       breaks tracing or silently constant-folds.
+- ``vmap-over-queue``  ``jax.vmap`` applied over the event-queue entry
+                       points — the exact regression the fused batch-native
+                       plan retired (the batch axis belongs in the kernel
+                       grid, not an outer vmap).
+- ``banned-import``    imports of ``tests``/``benchmarks`` (incl. the
+                       retired seed interpreter ``benchmarks._seed_reference``
+                       and the frozen ``tests._legacy_study``) from library
+                       code.
+- ``host-sync-marker`` host-synchronizing constructs (``.item()``,
+                       ``device_get``, ``block_until_ready``, callbacks)
+                       without an ``# audit: allow[host-sync] <reason>``
+                       marker on the same or preceding line. The allowlist
+                       is thereby *in the code*, next to each deliberate
+                       sync (the sparse occupancy gate, serve's
+                       block-until-ready), and the audit fails on any new
+                       unmarked one.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from .findings import Finding
+
+ALLOW_MARKER = "# audit: allow[host-sync]"
+
+_F64_NAMES = frozenset({"float64", "complex128"})
+_NP_ALIASES = frozenset({"np", "numpy"})
+_HOST_SYNC_METHODS = frozenset({"item", "device_get", "block_until_ready"})
+_HOST_SYNC_CALLS = frozenset({"pure_callback", "io_callback",
+                              "debug_callback"})
+# the event-queue *dispatch* entry points whose batch axis lives in the
+# kernel grid; vmapping any of them re-creates the per-sample dispatch the
+# fused batch-native plan retired. Host-side queue *builders* (e.g.
+# ``aeq.aeq_from_raster``, a Python loop over segments) are deliberately
+# absent: vmapping a builder is data preparation, not dispatch.
+QUEUE_ENTRY_POINTS = frozenset({
+    "fused_spike_accum", "fused_spike_accum_pallas", "fused_spike_accum_xla",
+    "fused_spike_accum_sparse", "fused_spike_accum_sparse_pallas",
+    "event_accum", "event_conv2d", "conv_layer_batch",
+})
+_BANNED_IMPORT_ROOTS = frozenset({"tests", "benchmarks"})
+_BANNED_IMPORT_NAMES = frozenset({"_seed_reference", "_legacy_study"})
+
+
+def iter_source_files(src_root: str):
+    """Every ``.py`` under ``src_root`` except the audit package itself
+    (the auditor names the constructs it bans, so self-linting would flag
+    its own rule tables)."""
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", "audit"))
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def _is_jit_decorator(node) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit"
+    if isinstance(node, ast.Call):
+        parts = [node.func, *node.args, *(kw.value for kw in node.keywords)]
+        return any(_is_jit_decorator(p) for p in parts)
+    return False
+
+
+def _names_in(node):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub.value
+
+
+def _has_marker(lines, lineno: int) -> bool:
+    """Marker on the call's own line, or anywhere in the contiguous
+    comment block immediately above it (markers wrap like any comment)."""
+    if 1 <= lineno <= len(lines) and ALLOW_MARKER in lines[lineno - 1]:
+        return True
+    ln = lineno - 1
+    while 1 <= ln <= len(lines) and lines[ln - 1].lstrip().startswith("#"):
+        if ALLOW_MARKER in lines[ln - 1]:
+            return True
+        ln -= 1
+    return False
+
+
+def check_file(path: str, root: str) -> list[Finding]:
+    """All AST rules over one source file."""
+    rel = os.path.relpath(path, root)
+    with open(path) as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("ast-parse", "error", rel, e.lineno or 0,
+                        f"file does not parse: {e.msg}")]
+    lines = source.splitlines()
+    out = []
+
+    jit_funcs = [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and any(_is_jit_decorator(d) for d in n.decorator_list)]
+    jit_spans = [(n.lineno, max((getattr(s, "end_lineno", s.lineno) or
+                                 s.lineno) for s in ast.walk(n)
+                                if hasattr(s, "lineno")))
+                 for n in jit_funcs]
+
+    def in_jit(lineno: int) -> bool:
+        return any(a <= lineno <= b for a, b in jit_spans)
+
+    for node in ast.walk(tree):
+        lineno = getattr(node, "lineno", 0)
+
+        # --- ast-f64 ---------------------------------------------------
+        name = (node.attr if isinstance(node, ast.Attribute)
+                else node.id if isinstance(node, ast.Name)
+                else node.value if isinstance(node, ast.Constant)
+                and isinstance(node.value, str) else None)
+        if name in _F64_NAMES:
+            out.append(Finding(
+                "ast-f64", "error", rel, lineno,
+                f"{name!r} in library code — the repo is strictly "
+                "single-precision (f64 would silently change every "
+                "bit-exactness baseline)"))
+
+        # --- ast-np-in-jit ---------------------------------------------
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in _NP_ALIASES and in_jit(lineno)):
+            out.append(Finding(
+                "ast-np-in-jit", "error", rel, lineno,
+                f"numpy call ({node.value.id}.{node.attr}) inside a "
+                "jit-decorated function — host math in a traced path "
+                "constant-folds or breaks tracing; use jnp"))
+
+        # --- vmap-over-queue -------------------------------------------
+        if (isinstance(node, ast.Call)
+                and ((isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "vmap")
+                     or (isinstance(node.func, ast.Name)
+                         and node.func.id == "vmap"))):
+            args = [*node.args, *(kw.value for kw in node.keywords)]
+            banned = sorted({n for a in args for n in _names_in(a)
+                             if n in QUEUE_ENTRY_POINTS})
+            if banned:
+                out.append(Finding(
+                    "vmap-over-queue", "error", rel, lineno,
+                    f"jax.vmap over queue entry point(s) {banned} — the "
+                    "event path is batch-native (batch axis in the kernel "
+                    "grid); vmapping it re-creates the retired per-sample "
+                    "dispatch"))
+
+        # --- banned-import ---------------------------------------------
+        mods = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mods = [node.module]
+            mods += [f"{node.module}.{a.name}" for a in node.names]
+        for mod in mods:
+            head = mod.split(".")[0]
+            leaf = mod.split(".")[-1]
+            if head in _BANNED_IMPORT_ROOTS or leaf in _BANNED_IMPORT_NAMES:
+                out.append(Finding(
+                    "banned-import", "error", rel, lineno,
+                    f"library code imports {mod!r} — tests, benchmarks, "
+                    "and the retired seed interpreter must depend on src/, "
+                    "never the reverse"))
+
+        # --- host-sync-marker ------------------------------------------
+        sync = None
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in
+                    (_HOST_SYNC_METHODS | _HOST_SYNC_CALLS)):
+                sync = node.func.attr
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in _HOST_SYNC_CALLS):
+                sync = node.func.id
+        if sync and not _has_marker(lines, lineno):
+            out.append(Finding(
+                "host-sync-marker", "error", rel, lineno,
+                f"host-synchronizing call {sync!r} without an "
+                f"'{ALLOW_MARKER} <reason>' marker — deliberate host "
+                "pulls must be annotated where they happen"))
+
+    return out
+
+
+def check_src(src_root: str, root: str) -> list[Finding]:
+    out = []
+    for path in iter_source_files(src_root):
+        out += check_file(path, root)
+    return out

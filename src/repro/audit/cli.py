@@ -1,0 +1,180 @@
+"""``python -m repro.audit`` — run every contract rule, report, gate.
+
+Exit status:
+
+- default: nonzero iff any **error**-severity finding is not in the
+  committed baseline;
+- ``--strict`` (the CI gate): nonzero iff any error *or warning* is not in
+  the baseline — i.e. the baseline is the complete set of accepted
+  findings, and anything new fails the job. Info-severity notes (e.g. a
+  skipped check on a host without pallas-tpu) never gate.
+
+``--write-baseline`` rewrites ``audit_baseline.json`` from the current
+warnings (errors are never baselined — fix them); each entry then needs a
+human-edited one-line justification before ``Baseline.load`` accepts it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from . import ast_rules, gh_summary, reachability
+from .findings import Baseline, BaselineError, Finding
+
+
+def repo_root() -> str:
+    # audit/cli.py -> audit -> repro -> src -> repo root
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+
+
+def collect_static(root: str) -> list[Finding]:
+    """The pure-AST layer: lint + reachability (no jax import needed)."""
+    src_root = os.path.join(root, "src")
+    findings = ast_rules.check_src(src_root, root)
+    findings += reachability.check_reachability(root, src_root)
+    return findings
+
+
+def collect_traced(root: str) -> list[Finding]:
+    """The jaxpr layer: probe traces, contracts, VMEM, recompile harness."""
+    from ..core import engine
+    from . import harness, jaxpr_rules, probe, vmem
+
+    findings: list[Finding] = []
+    cfg = probe.probe_config()
+    tainted = probe.batch_tainted_sizes(cfg)
+
+    for name in engine.available_backends():
+        contract = engine.BACKEND_CONTRACTS[name]
+        if contract.host_dispatch:
+            traces = probe.trace_sparse_pieces(cfg)
+            for piece, closed in traces.items():
+                declared = (contract.cross_batch_reductions
+                            if piece.endswith("_stats_fn") else 0)
+                findings += jaxpr_rules.check_dtypes(piece, closed, root)
+                findings += jaxpr_rules.check_host_sync(piece, closed, root)
+                findings += jaxpr_rules.check_batch_purity(
+                    piece, closed, tainted, declared, root)
+                findings += jaxpr_rules.check_no_int8_dequant(
+                    piece, closed, root)
+        else:
+            closed = probe.trace_backend(name, cfg)
+            findings += jaxpr_rules.check_dtypes(f"backend:{name}", closed,
+                                                 root)
+            findings += jaxpr_rules.check_host_sync(f"backend:{name}",
+                                                    closed, root)
+            findings += jaxpr_rules.check_batch_purity(
+                f"backend:{name}", closed, tainted,
+                contract.cross_batch_reductions, root)
+            findings += jaxpr_rules.check_no_int8_dequant(
+                f"backend:{name}", closed, root)
+
+    # the int8 discipline, against each quant path's declared contract
+    from .contracts import QuantContract
+    for name, closed in probe.trace_quant_kernels().items():
+        findings += jaxpr_rules.check_quant(name, closed, QuantContract(),
+                                            root)
+        findings += jaxpr_rules.check_dtypes(name, closed, root)
+
+    # the Pallas kernel bodies (interpretable trace, no TPU needed)
+    pallas = probe.trace_pallas_kernels(cfg)
+    if not pallas:  # pragma: no cover - pallas-tpu unavailable
+        findings.append(Finding(
+            "pallas-trace", "info", "-", 0,
+            "pallas-tpu module unavailable on this host; kernel-body dtype "
+            "checks skipped"))
+    for name, closed in pallas.items():
+        findings += jaxpr_rules.check_dtypes(name, closed, root)
+        findings += jaxpr_rules.check_host_sync(name, closed, root)
+
+    findings += vmem.check_vmem(root)
+    findings += harness.check_recompilation(root)
+    return findings
+
+
+def _report(args, fresh, baselined, stale, errors, warnings) -> str:
+    verdict = ("✅ no findings outside the baseline" if not fresh else
+               f"❌ {len(errors)} error(s), {len(warnings)} warning(s) "
+               "outside the baseline")
+    sections = []
+    if fresh:
+        sections.append(("Findings outside the baseline", gh_summary.markdown_table(
+            ["severity", "rule", "location", "message"],
+            [[f.severity, f.rule, f"`{f.location}`", f.message]
+             for f in sorted(fresh)])))
+    if baselined:
+        sections.append((
+            "Baselined (accepted) findings",
+            f"{len(baselined)} finding(s) matched `{args.baseline}`"))
+    if stale:
+        sections.append(("Stale baseline entries", gh_summary.markdown_table(
+            ["rule", "file", "message"],
+            [[e["rule"], f"`{e['file']}`", e["message"]] for e in stale])
+            + "\n\nno longer observed — prune them from the baseline"))
+    return gh_summary.render_report("Contract audit (`repro.audit`)",
+                                    verdict, sections)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.audit",
+        description="static contract checker: jaxpr + AST rules")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on any non-baselined error OR warning (CI)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="AST/reachability only (fast; skips jax probes)")
+    ap.add_argument("--root", default=repo_root(),
+                    help="repo root (default: inferred from this file)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline path (default: <root>/audit_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current warnings")
+    ap.add_argument("--json", default="", help="write findings JSON here")
+    ap.add_argument("--summary", default="",
+                    help="append the markdown report to this file "
+                         "($GITHUB_STEP_SUMMARY in CI)")
+    args = ap.parse_args(argv)
+    args.baseline = args.baseline or os.path.join(args.root,
+                                                  "audit_baseline.json")
+
+    findings = collect_static(args.root)
+    if not args.no_trace:
+        findings += collect_traced(args.root)
+
+    try:
+        baseline = Baseline.load(args.baseline)
+    except BaselineError as e:
+        print(f"error: {e}")
+        return 2
+
+    gating = [f for f in findings if f.severity != "info"]
+    fresh, baselined, stale = baseline.split(gating)
+    errors = [f for f in fresh if f.severity == "error"]
+    warnings = [f for f in fresh if f.severity == "warning"]
+
+    if args.write_baseline:
+        keep = [f for f in gating if f.severity == "warning"]
+        Baseline.from_findings(sorted(keep)).save(args.baseline)
+        print(f"wrote {len(keep)} warning(s) to {args.baseline} — edit each "
+              "entry's justification before committing "
+              f"({len(errors)} error(s) NOT baselined; fix them)")
+
+    report = _report(args, fresh, baselined, stale, errors, warnings)
+    gh_summary.emit(report, args.summary)
+    for f in sorted(fresh):
+        print(f.render())
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({
+                "findings": [f.to_json() for f in sorted(fresh)],
+                "baselined": [f.to_json() for f in sorted(baselined)],
+                "stale_baseline": stale,
+                "info": [f.to_json() for f in findings
+                         if f.severity == "info"],
+            }, fh, indent=2)
+
+    if errors or (args.strict and warnings):
+        return 1
+    return 0

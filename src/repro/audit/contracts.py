@@ -1,0 +1,80 @@
+"""CONTRACT descriptors: the declared intent the auditor verifies.
+
+Kernels and backends do not get their invariants inferred — they *declare*
+them in small pure-data descriptors placed next to the code (``CONTRACT``
+module attributes in ``kernels/*.py``, ``BACKEND_CONTRACTS`` in
+``core/engine.py``, ``CONTRACT`` in ``serve/registry.py``). The jaxpr
+auditor then checks the trace against the declaration, so a drive-by edit
+that e.g. adds a second dequant or a stray cross-batch reduction fails the
+audit even though every runtime test still passes on the new numerics.
+
+This module is deliberately dependency-free (no jax, no repro imports):
+engine and the kernels import it at module scope, and the auditor imports
+them — any import edge back out of here would be a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: VMEM available to one Pallas program instance on the TPU generation the
+#: paper targets (v4/v5e class). The estimator gates against this, minus
+#: nothing — BlockSpec-managed buffers are modelled explicitly, including
+#: the pipeline's double-buffering.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+#: Pipelined in/out blocks are double-buffered by the Mosaic pipeline
+#: emitter (fetch of grid step i+1 overlaps compute of step i).
+DOUBLE_BUFFER_FACTOR = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantContract:
+    """The int8-weight discipline: quantized weights must accumulate in
+    exactly ``accum_dtype`` and convert to float exactly ``dequants`` times
+    (the single declared rescale). A trace with an int8->float convert, a
+    float accumulate over int operands, or a second int->float convert
+    violates the contract even if it happens to be numerically close."""
+
+    weight_dtype: str = "int8"
+    accum_dtype: str = "int32"
+    dequants: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Declared Pallas-kernel resource intent, checked by ``audit.vmem``.
+
+    ``in_blocks``/``out_blocks``/``scratch_blocks`` name the per-grid-cell
+    resident buffers as ``(name, shape_fn_key, dtype)`` — the shapes are
+    functions of the launch geometry, so each kernel module exposes a
+    ``vmem_blocks(geom)`` helper returning the concrete ``(name, shape,
+    dtype, double_buffered)`` tuples; the contract records which module
+    that is plus the dtype/quant intent the jaxpr rules verify.
+    """
+
+    name: str
+    module: str                       # e.g. 'repro.kernels.spike_pipeline'
+    accum_dtype: str = "int32"        # accumulator dtype inside the kernel
+    quant: QuantContract | None = None
+    # host syncs the kernel's *dispatch path* is allowed to perform, by
+    # marker name; anything else device->host inside the path is an error
+    allowed_host_syncs: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendContract:
+    """Declared per-backend trace intent, checked against the batched plan.
+
+    ``cross_batch_reductions``: number of reductions over the batch axis
+    the backend's jitted functions are allowed to contain. The mask
+    contract (padded rows bit-inert) holds iff every cross-batch reduction
+    is declared — queue_sparse's occupancy stats fn owns the only two.
+    ``host_dispatch`` backends are traced per jitted piece rather than as
+    one batched plan (the plan walk itself runs in Python on the host).
+    """
+
+    name: str
+    cross_batch_reductions: int = 0
+    host_dispatch: bool = False
+    quant: QuantContract | None = None
+    allowed_host_syncs: tuple = ()

@@ -1,0 +1,114 @@
+"""Recompilation harness: prove the jit caches stay flat on repeat shapes.
+
+The static layer can flag *patterns* that recompile (a Python scalar closed
+over per call, an unbucketed dynamic shape), but the ground truth is the
+jit cache itself, so this harness executes every backend's batched runner
+twice over the same tiny shape set and asserts the cache-entry count does
+not grow on the second pass. Host-dispatch backends have no single jit
+cache; their per-bucket ``lru_cache``s are checked for the same flatness
+instead. This is the one place the audit runs code — everything else only
+traces or parses.
+
+The same invariant at the serving layer (AOT plans, not the jit cache) is
+enforced at runtime by ``serve.registry.ModelHandle.warmup``'s second-pass
+guard; this harness is its engine-level counterpart.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import engine
+from . import probe
+from .findings import Finding
+
+#: Two shapes per backend: enough to prove per-shape specialization works
+#: AND that repeating a shape never re-traces.
+_HARNESS_BATCHES = (2, 4)
+
+
+def _cache_size(jitted) -> int | None:
+    fn = getattr(jitted, "_cache_size", None)
+    return fn() if callable(fn) else None
+
+
+def check_recompilation(root: str) -> list[Finding]:
+    """``recompile``: jit-cache entry count flat across a second pass."""
+    cfg = probe.probe_config()
+    plan = engine.compile_plan(cfg.spec, cfg.input_hw, cfg.input_c,
+                               cfg.compressed)
+    params = probe.probe_params(plan)
+    thresholds = probe.probe_thresholds(plan)
+    out = []
+
+    for name in engine.available_backends():
+        backend = engine.get_backend(name)
+        if getattr(backend, "host_dispatch", False):
+            out += _check_host_dispatch(name, cfg, params, thresholds)
+            continue
+        runner = engine.batch_runner(cfg, name)
+
+        def pass_once():
+            for B in _HARNESS_BATCHES:
+                logits, _ = runner(params, thresholds,
+                                   probe.probe_images(cfg, B))
+                logits.block_until_ready()
+
+        pass_once()
+        first = _cache_size(runner)
+        if first is None:  # pragma: no cover - jax-internal API drift
+            out.append(Finding(
+                "recompile", "warning", "-", 0,
+                f"backend {name!r}: jit cache size not observable on this "
+                "jax version; recompilation hazard unchecked"))
+            continue
+        pass_once()
+        second = _cache_size(runner)
+        if second > first:
+            out.append(Finding(
+                "recompile", "error", "src/repro/core/engine.py", 0,
+                f"backend {name!r}: jit cache grew {first} -> {second} on "
+                f"a second pass over the same batch shapes "
+                f"{_HARNESS_BATCHES} — a closed-over Python value is "
+                "specializing per call"))
+    return out
+
+
+def _check_host_dispatch(name, cfg, params, thresholds) -> list[Finding]:
+    """Same flatness for the sparse backend's per-bucket lru caches."""
+    caches = {
+        "engine._sparse_stats_fn": engine._sparse_stats_fn,
+        "engine._sparse_layer_fn": engine._sparse_layer_fn,
+        "engine._sparse_analog_fn": engine._sparse_analog_fn,
+    }
+
+    def pass_once():
+        for B in _HARNESS_BATCHES:
+            logits, _ = engine.infer_batch(
+                params, thresholds, cfg, probe.probe_images(cfg, B),
+                backend=name)
+            logits.block_until_ready()
+
+    pass_once()
+    first = {k: c.cache_info().currsize for k, c in caches.items()}
+    pass_once()
+    out = []
+    for k, c in caches.items():
+        now = c.cache_info().currsize
+        if now > first[k]:
+            out.append(Finding(
+                "recompile", "error", "src/repro/core/engine.py", 0,
+                f"backend {name!r}: {k} bucket cache grew "
+                f"{first[k]} -> {now} on identical inputs — the occupancy "
+                "gate is producing unstable bucket keys"))
+    return out
+
+
+def second_pass_flat(runner, params, thresholds, images) -> bool:
+    """Test hook: True iff repeating ``images`` adds no jit-cache entry."""
+    logits, _ = runner(params, thresholds, images)
+    jnp.asarray(logits).block_until_ready()
+    before = _cache_size(runner)
+    logits, _ = runner(params, thresholds, images)
+    jnp.asarray(logits).block_until_ready()
+    after = _cache_size(runner)
+    return before is not None and after == before

@@ -1,32 +1,13 @@
-"""Architecture registry: 10 assigned LM-family configs + paper SNN/CNN specs.
+"""Paper model specs + benchmark shapes.
 
-``get(name)`` returns the full ArchConfig; ``get_smoke(name)`` returns a
-reduced same-family config for CPU smoke tests (full configs are exercised
-only via the dry-run's ShapeDtypeStructs).
+Historically this package also carried a 10-architecture LM config zoo,
+loaded dynamically via ``importlib``. The zoo was unreachable from the SNN
+reproduction path — ``python -m repro.audit`` flagged every module dead —
+and has been deleted; tests that still need reduced LM configs hold them
+inline (``tests/_smoke_archs.py``). ``get``/``get_smoke`` remain only to
+fail loudly with that pointer.
 """
 from __future__ import annotations
-
-import importlib
-
-ARCHS = [
-    "xlstm_125m",
-    "internlm2_20b",
-    "starcoder2_7b",
-    "phi4_mini_3_8b",
-    "gemma_7b",
-    "qwen2_moe_a2_7b",
-    "moonshot_v1_16b_a3b",
-    "llava_next_34b",
-    "jamba_v0_1_52b",
-    "seamless_m4t_medium",
-]
-
-ALIASES = {a.replace("_", "-"): a for a in ARCHS}
-ALIASES.update({
-    "phi4-mini-3.8b": "phi4_mini_3_8b",
-    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
-    "jamba-v0.1-52b": "jamba_v0_1_52b",
-})
 
 # the paper's own model zoo (Table 6)
 PAPER_SPECS = {
@@ -44,32 +25,19 @@ SHAPES = {
     "long_500k": dict(kind="decode", seq=524288, batch=1),
 }
 
-
-# §Perf-winning execution knobs per architecture (EXPERIMENTS.md §Perf).
-# Applied by launch/dryrun.py --tuned and available to launchers; baselines
-# stay as-assigned so both numbers remain visible.
-TUNED = {
-    "xlstm-125m": dict(profile="dp_only", seq_chunk=64, dp_shard_map=True),
-    "internlm2-20b": dict(dp=64, tp=4, microbatches=2),
-    "qwen2-moe-a2.7b": dict(moe_pad=64),
-    "moonshot-v1-16b-a3b": dict(moe_pad=64),   # 64 % 16 == 0 already; EP hint
-}
+_ZOO_REMOVED = (
+    "the LM architecture zoo was removed (dead code on the SNN path, "
+    "flagged by `python -m repro.audit`); pass an ArchConfig directly — "
+    "reduced smoke configs live in tests/_smoke_archs.py"
+)
 
 
 def get(name: str):
-    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
-    mod = importlib.import_module(f".{mod_name}", __package__)
-    return mod.CONFIG
+    raise LookupError(f"configs.get({name!r}): {_ZOO_REMOVED}")
 
 
 def get_smoke(name: str):
-    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
-    mod = importlib.import_module(f".{mod_name}", __package__)
-    return mod.SMOKE
-
-
-def all_arch_names():
-    return [a.replace("_", "-") for a in ARCHS]
+    raise LookupError(f"configs.get_smoke({name!r}): {_ZOO_REMOVED}")
 
 
 def shape_applicable(cfg, shape_name: str) -> tuple[bool, str]:

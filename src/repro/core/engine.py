@@ -48,6 +48,7 @@ from typing import NamedTuple, Protocol
 import jax
 import jax.numpy as jnp
 
+from ..audit.contracts import BackendContract, QuantContract
 from . import encoding
 from .aeq import (AEQ, aeq_from_raster, phase_occupancy, segment_keep,
                   span_map)
@@ -757,9 +758,15 @@ class SparseQueueBackend:
         N = B * cfg.T
         K2, P = occ.shape[-2:]
         impl = kops.default_sparse_impl()
+        # audit: allow[host-sync] the occupancy gate — ONE declared scalar
+        # pull per layer picks the power-of-two event bucket
+        total_host = int(jax.device_get(total))
+        # audit: allow[host-sync] same gate: active-row count for the
+        # ragged Pallas grid
+        n_act_host = int(jax.device_get(n_act))
         e_cap = event_bucket(
-            int(total), max_kept_events((N, cp.in_c, K2, P), cfg.depth))
-        n_rows = (min(event_bucket(int(n_act), N), N)
+            total_host, max_kept_events((N, cp.in_c, K2, P), cfg.depth))
+        n_rows = (min(event_bucket(n_act_host, N), N)
                   if impl.startswith("sparse_pallas") else None)
         out = _sparse_layer_fn(cp, cfg, impl, e_cap, n_rows)(occ, w, b, vth)
 
@@ -1091,6 +1098,25 @@ register_backend("queue", QueueBackend())
 register_backend("queue_pallas", QueueBackend(accum="pallas"))
 register_backend("queue_ref", QueueBackend(accum="ref"))
 register_backend("queue_sparse", SparseQueueBackend())
+
+# Declared trace intent per backend, verified by ``python -m repro.audit``
+# (see docs/CONTRACTS.md). ``cross_batch_reductions`` is the mask contract
+# stated structurally: the number of reductions over the batch axis the
+# backend's jitted programs may contain — zero for every traced backend
+# (padded rows must be bit-inert), and exactly two for the sparse backend's
+# occupancy-gate stats pass (the global event total and the active-row
+# count, both feeding the bucket choice, never the numerics). A backend
+# registered without a contract fails the audit at lookup time.
+BACKEND_CONTRACTS: dict[str, BackendContract] = {
+    "dense": BackendContract(name="dense"),
+    "dense_unrolled": BackendContract(name="dense_unrolled"),
+    "queue": BackendContract(name="queue"),
+    "queue_pallas": BackendContract(name="queue_pallas"),
+    "queue_ref": BackendContract(name="queue_ref", quant=QuantContract()),
+    "queue_sparse": BackendContract(
+        name="queue_sparse", cross_batch_reductions=2, host_dispatch=True,
+        quant=QuantContract(), allowed_host_syncs=("occupancy-gate",)),
+}
 
 # a re-registered neuron mode must invalidate compiled runners too, or a
 # cached executable would keep executing the old fire function — including

@@ -35,6 +35,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..audit.contracts import KernelContract
+
+# Declared resource/dtype intent, verified by ``python -m repro.audit``
+# (see docs/CONTRACTS.md): fp32 accumulate, no host syncs, and the whole
+# membrane map resident in VMEM (the design note above) within budget.
+CONTRACT = KernelContract(name="event_accum", module=__name__,
+                          accum_dtype="float32")
+
+
+def vmem_blocks(*, K, H, W, C_out, **_unused):
+    """Per-grid-cell resident buffers as data, for ``audit.vmem``.
+
+    Mirrors :func:`event_accum`'s BlockSpecs: the packed-word and count
+    slices, the weight slice, and the full membrane map both as input and
+    output (the kernel keeps it VMEM-resident across the whole layer).
+    """
+    K2 = K * K
+    return [
+        ("words_block", (K2, 1), 4, True),
+        ("counts_block", (K2,), 4, True),
+        ("w_block", (K, K, C_out), 4, True),
+        ("vm_in_block", (H, W, C_out), 4, True),
+        ("out_block", (H, W, C_out), 4, True),
+    ]
+
 
 def _kernel(words_ref, counts_ref, w_ref, vm_in_ref, vm_ref, *, K, n_win, bits, H, W):
     """One grid step: d-th event of every phase queue for channel c."""

@@ -53,10 +53,37 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..audit.contracts import KernelContract
+
 try:  # TPU scratch spaces; absent on some CPU-only builds
     from jax.experimental.pallas import tpu as pltpu
 except ImportError:  # pragma: no cover - environment without pallas-tpu
     pltpu = None
+
+# Declared resource/dtype intent, verified by ``python -m repro.audit``
+# (see docs/CONTRACTS.md): fp32 accumulate (no quant path here), no host
+# syncs, and the VMEM footprint below against the per-core budget.
+CONTRACT = KernelContract(name="fused_spike_accum_pallas",
+                          module=__name__, accum_dtype="float32")
+
+
+def vmem_blocks(*, K, n_win, depth, H, W, C_out, seg=None, **_unused):
+    """Per-grid-cell resident buffers as data, for ``audit.vmem``.
+
+    Mirrors :func:`fused_spike_accum_pallas`'s BlockSpecs and scratch
+    exactly — ``(name, block shape, bytes per element, double-buffered)``;
+    pipelined in/out blocks are double-buffered by the Mosaic emitter,
+    scratch is not.
+    """
+    K2 = K * K
+    P = n_win * n_win
+    seg = _default_seg(depth, n_win) if seg is None else min(seg, depth)
+    return [
+        ("occ_block", (K2, P), 4, True),
+        ("w_block", (K, K, C_out), 4, True),
+        ("out_block", (H, W, C_out), 4, True),
+        ("seg_scratch", (2, K2, seg), 4, False),
+    ]
 
 
 def _default_seg(depth: int, n_win: int) -> int:

@@ -44,12 +44,41 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..audit.contracts import KernelContract, QuantContract
 from ..core.quantization import quantize_symmetric
 
 try:  # TPU scratch spaces; absent on some CPU-only builds
     from jax.experimental.pallas import tpu as pltpu
 except ImportError:  # pragma: no cover - environment without pallas-tpu
     pltpu = None
+
+# Declared resource/dtype intent, verified by ``python -m repro.audit``
+# (see docs/CONTRACTS.md): with ``weight_bits`` the accumulate is int8
+# weights -> exact int32 -> ONE fp32 dequant; the dispatcher's bucket pull
+# is the repo's declared 'occupancy-gate' host sync (marked in engine.py).
+CONTRACT = KernelContract(name="fused_spike_accum_sparse",
+                          module=__name__, accum_dtype="int32",
+                          quant=QuantContract(),
+                          allowed_host_syncs=("occupancy-gate",))
+
+
+def vmem_blocks(*, K, n_win, depth, H, W, C_out, seg=None, **_unused):
+    """Per-grid-cell resident buffers of the gated Pallas kernel, as data.
+
+    The dense-walk pipeline's blocks plus the two (1,)-scalar gate inputs
+    (cell total + fill bound); see ``audit.vmem``.
+    """
+    K2 = K * K
+    P = n_win * n_win
+    seg = _default_seg(depth, n_win) if seg is None else min(seg, depth)
+    return [
+        ("occ_block", (K2, P), 4, True),
+        ("w_block", (K, K, C_out), 4, True),
+        ("tot_gate", (1,), 4, True),
+        ("pmax_gate", (1,), 4, True),
+        ("out_block", (H, W, C_out), 4, True),
+        ("seg_scratch", (2, K2, seg), 4, False),
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -95,8 +95,14 @@ def cell_cost(arch: str, shape_name: str, *, multi_pod: bool = False,
     """Knobs mirror the dry-run overrides so hypotheses can be napkin-mathed
     before lowering: dp/tp mesh split, dp_only profile (pure replication),
     microbatch count, moe_ep (expert-parallel dispatch instead of
-    width-sharded experts)."""
-    cfg = cfg or configs.get(arch)
+    width-sharded experts). ``cfg`` is required — ``arch`` only labels the
+    cell (the registry the name used to resolve against was removed)."""
+    if cfg is None:
+        raise ValueError(
+            f"cell_cost({arch!r}, {shape_name!r}): pass cfg= explicitly — "
+            "the LM config zoo was removed (dead code, flagged by "
+            "`python -m repro.audit`); reduced configs live in "
+            "tests/_smoke_archs.py")
     shape = configs.SHAPES[shape_name]
     B, S = shape["batch"], shape["seq"]
     kind = shape["kind"]

@@ -152,16 +152,22 @@ def batch_axes_for(specs: dict) -> dict:
 def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
                unroll: bool = False, overrides: dict | None = None,
                dp: int = 16, tp: int = 16, profile: str = "auto",
-               dp_shard_map: bool = False):
+               dp_shard_map: bool = False, cfg=None):
     """Lower + compile one cell; returns the result record.
 
+    ``cfg`` is required (``arch`` only labels the record — the config zoo
+    the name used to resolve against was removed as dead code).
     unroll=True lowers without layer scans (exact HLO cost accounting) and
     forces microbatches=1; used for the §Perf hillclimb cells.
     overrides: dataclasses.replace overrides applied to the config (the
     hillclimb loop's change knob)."""
     import dataclasses
 
-    cfg = configs.get(arch)
+    if cfg is None:
+        raise ValueError(
+            f"build_cell({arch!r}, {shape_name!r}): pass cfg= explicitly — "
+            "the LM config zoo was removed (dead code, flagged by "
+            "`python -m repro.audit`)")
     if unroll:
         cfg = dataclasses.replace(cfg, scan_layers=False, microbatches=1)
     if overrides:
@@ -312,95 +318,19 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch")
-    ap.add_argument("--shape")
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--out", default="experiments/dryrun")
-    ap.add_argument("--force", action="store_true")
-    ap.add_argument("--unroll", action="store_true",
-                    help="lower without layer scans (exact HLO accounting)")
-    ap.add_argument("--dp", type=int, default=16)
-    ap.add_argument("--tp", type=int, default=16)
-    ap.add_argument("--profile", default="auto", choices=["auto", "dp_only"])
-    ap.add_argument("--microbatches", type=int, default=0)
-    ap.add_argument("--moe-pad", type=int, default=0,
-                    help="pad the expert stack to this bank count (EP)")
-    ap.add_argument("--remat", default="", choices=["", "none", "full", "dots", "names"])
-    ap.add_argument("--seq-chunk", type=int, default=0)
-    ap.add_argument("--dp-shard-map", action="store_true",
-                    help="manual-DP grads via shard_map (needs --profile dp_only)")
-    ap.add_argument("--tag", default="", help="variant tag for the artifact")
-    ap.add_argument("--tuned", action="store_true",
-                    help="apply the §Perf-winning knobs from configs.TUNED")
-    args = ap.parse_args()
+    """CLI stub: the zoo-driven sweep is retired.
 
-    cells = []
-    if args.all:
-        for arch in configs.all_arch_names():
-            for shape in configs.SHAPES:
-                cells.append((arch, shape))
-    else:
-        cells = [(args.arch, args.shape)]
-
-    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
-    outdir = os.path.join(args.out, mesh_tag)
-    os.makedirs(outdir, exist_ok=True)
-
-    failures = 0
-    for arch, shape in cells:
-        suffix = "__unrolled" if args.unroll else ""
-        if args.tag:
-            suffix += f"__hc_{args.tag}"
-        path = os.path.join(outdir, f"{arch}__{shape}{suffix}.json")
-        if os.path.exists(path) and not args.force:
-            print(f"[cached] {arch} x {shape}")
-            continue
-        print(f"[dryrun] {arch} x {shape} on {mesh_tag} ...", flush=True)
-        if args.tuned and arch in configs.TUNED:
-            t = configs.TUNED[arch]
-            args.dp = t.get("dp", args.dp)
-            args.tp = t.get("tp", args.tp)
-            args.profile = t.get("profile", args.profile)
-            args.microbatches = t.get("microbatches", args.microbatches)
-            args.moe_pad = t.get("moe_pad", args.moe_pad)
-            args.seq_chunk = t.get("seq_chunk", args.seq_chunk)
-            args.dp_shard_map = t.get("dp_shard_map", args.dp_shard_map)
-        overrides = {}
-        if args.microbatches:
-            overrides["microbatches"] = args.microbatches
-        if args.remat:
-            overrides["remat"] = args.remat
-        if args.seq_chunk:
-            overrides["seq_chunk"] = args.seq_chunk
-        if args.moe_pad:
-            import dataclasses as _dc
-
-            base_moe = configs.get(arch).moe
-            overrides["moe"] = base_moe._replace(n_padded_experts=args.moe_pad)
-        try:
-            rec = build_cell(arch, shape, multi_pod=args.multi_pod,
-                             unroll=args.unroll, overrides=overrides,
-                             dp=args.dp, tp=args.tp, profile=args.profile,
-                             dp_shard_map=args.dp_shard_map)
-        except Exception as e:  # noqa: BLE001 — record and continue the sweep
-            failures += 1
-            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
-                   "error": f"{type(e).__name__}: {e}",
-                   "traceback": traceback.format_exc()[-4000:]}
-        with open(path, "w") as f:
-            json.dump(rec, f, indent=1)
-        if "error" in rec:
-            print(f"  FAILED: {rec['error'].splitlines()[0]}")
-        elif "skipped" in rec:
-            print(f"  skipped: {rec['skipped']}")
-        else:
-            t = rec["roofline_terms_s"]
-            print(f"  ok ({rec['compile_s']}s compile) "
-                  f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
-                  f"collective={t['collective_s']:.3e}s -> {rec['bottleneck']}")
-    raise SystemExit(1 if failures else 0)
+    The per-cell sweep iterated the 10-architecture LM config zoo, which
+    was removed as dead code (flagged by `python -m repro.audit`). The
+    HLO-accounting helpers above (collective_bytes, _loop_multipliers,
+    _shape_bytes, build_cell with an explicit cfg) remain the library API
+    for roofline analysis and are exercised by tests/test_dryrun_tools.py.
+    """
+    print("repro.launch.dryrun: the LM config zoo this sweep iterated was "
+          "removed (dead code, flagged by `python -m repro.audit`).\n"
+          "Use build_cell(arch_label, shape, cfg=<ArchConfig>, ...) from "
+          "Python for single-cell roofline records.")
+    raise SystemExit(0)
 
 
 if __name__ == "__main__":

@@ -11,9 +11,9 @@ unit-testable with a fake clock (tests/test_fault_tolerance.py):
 - ``ElasticPlan``        : given surviving device count, derives the new mesh
   (launch.mesh.make_elastic_mesh), the checkpoint step to resume from, and
   the per-host data-shard reassignment.
-- ``run_resilient``      : the supervision loop used by launch/train.py —
-  train step, async checkpoint every K steps, auto-resume on failure
-  (simulated failures injectable for tests/examples).
+- ``run_resilient``      : the training supervision loop — train step,
+  async checkpoint every K steps, auto-resume on failure (simulated
+  failures injectable for tests/examples).
 """
 from __future__ import annotations
 

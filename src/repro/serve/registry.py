@@ -21,9 +21,19 @@ import collections
 import jax
 import jax.numpy as jnp
 
+from ..audit.contracts import BackendContract
 from ..core import engine
 from .api import ServeError
 from .batching import DEFAULT_BUCKETS
+
+# Declared trace intent of the serving layer, verified by
+# ``python -m repro.audit`` (see docs/CONTRACTS.md): the served plans are
+# the engine's batched programs (zero cross-batch reductions — the mask
+# contract is what makes padded buckets safe), and the one deliberate host
+# sync is the per-bucket block-until-ready in ``run_bucket`` (latency
+# metering needs the device done before the response timestamp).
+CONTRACT = BackendContract(name="serve",
+                           allowed_host_syncs=("serve-block-until-ready",))
 
 
 class ModelHandle:
@@ -52,6 +62,11 @@ class ModelHandle:
         self.mesh = mesh                     # data mesh for divisible buckets
         # bucket B -> compiled executable, insertion-ordered for LRU
         self._plans: collections.OrderedDict = collections.OrderedDict()
+        # AOT compilations performed (cache misses in plan_for): the
+        # observable the warmup recompilation guard asserts stays flat —
+        # AOT plans bypass the jit cache, so the jit-cache counter the
+        # audit harness uses for the engine cannot see them
+        self.compile_count = 0
 
     def set_mesh(self, mesh) -> None:
         """(Re)point this handle at a device mesh; drops compiled plans.
@@ -111,6 +126,7 @@ class ModelHandle:
             runner = engine.batch_runner(self.cfg, self.backend)
         plan = runner.lower(self.params, self.thresholds,
                             self._image_struct(bucket)).compile()
+        self.compile_count += 1
         self._plans[bucket] = plan
         while len(self._plans) > self.plan_cache_size:
             self._plans.popitem(last=False)
@@ -124,6 +140,8 @@ class ModelHandle:
         mask contract). ``images`` is the already-padded (B, H, W, C) array."""
         logits, stats = self.plan_for(images.shape[0])(
             self.params, self.thresholds, jnp.asarray(images))
+        # audit: allow[host-sync] serve latency metering: the response
+        # timestamp must not be taken before the device is done
         jax.block_until_ready(logits)
         return engine.slice_valid(logits, stats, n_valid)
 
@@ -132,11 +150,32 @@ class ModelHandle:
 
         The execute matters: it forces any lazily initialized backend state
         and faults the executable's working set before the first request.
+
+        **Recompilation guard**: after the first pass compiled every bucket,
+        a second pass over the same bucket sizes must be all cache hits —
+        ``compile_count`` flat. Growth means some Python value (mesh
+        placement, params identity, a closed-over scalar) is specializing
+        per call, i.e. production would re-trace on live traffic; that is
+        the unbounded-specialization hazard ``repro.audit``'s harness
+        checks statically at the engine layer, caught here at runtime.
         """
         for b in buckets:
             zeros = jnp.zeros((b, self.cfg.input_hw, self.cfg.input_hw,
                                self.cfg.input_c), jnp.float32)
             self.run_bucket(zeros, b)
+        if len(set(buckets)) > self.plan_cache_size:
+            return  # LRU eviction makes second-pass recompiles legitimate
+        compiled = self.compile_count
+        for b in buckets:
+            zeros = jnp.zeros((b, self.cfg.input_hw, self.cfg.input_hw,
+                               self.cfg.input_c), jnp.float32)
+            self.run_bucket(zeros, b)
+        if self.compile_count != compiled:
+            raise ServeError(
+                f"model {self.name!r}: warmup second pass recompiled "
+                f"({compiled} -> {self.compile_count} compilations for "
+                f"buckets {tuple(buckets)}) — the compiled-plan cache is "
+                "not keying on bucket size alone")
 
 
 class ModelRegistry:

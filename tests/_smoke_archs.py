@@ -1,0 +1,109 @@
+"""Inline smoke-scale ArchConfigs for the model-stack tests.
+
+The LM architecture zoo (10 full-size configs under ``repro.configs``) was
+dead code on the SNN-reproduction path and was deleted — ``repro.audit``'s
+reachability rule flagged every module, since only ``importlib`` reached
+them. The *model code paths* they exercised still deserve smoke coverage,
+so this module keeps one reduced config per distinct path:
+
+    dense + swiglu (tied and untied embeddings), dense + gelu/layernorm,
+    dense + geglu with an explicit head_dim, MoE routing (shared + routed
+    experts), the mamba/attention hybrid with interleaved MoE, the
+    mLSTM/sLSTM recurrent stack, encoder-decoder with an audio frontend,
+    and the vision-frontend VLM backbone.
+
+Tests import from here; nothing under ``src/`` may import tests (enforced
+by the audit's ``banned-import`` rule).
+"""
+from repro.models.model import ArchConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import MambaConfig
+
+SMOKES = {
+    "dense-tied": ArchConfig(
+        name="dense-tied-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+        vocab=256, act="swiglu", tie_embeddings=True, remat="none",
+    ),
+    "dense-untied": ArchConfig(
+        name="dense-untied-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+        vocab=128, act="swiglu", remat="none",
+    ),
+    "dense-gelu-ln": ArchConfig(
+        name="dense-gelu-ln-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+        vocab=128, act="gelu", norm="layernorm", remat="none",
+    ),
+    "dense-geglu-hd": ArchConfig(
+        name="dense-geglu-hd-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=2, kv_heads=2, head_dim=48,
+        d_ff=128, vocab=128, act="geglu", tie_embeddings=True, remat="none",
+    ),
+    "moe": ArchConfig(
+        name="moe-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=0,
+        vocab=128, act="swiglu",
+        moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=96, shared_d_ff=96,
+                      every_k_layers=1),
+        remat="none",
+    ),
+    "hybrid": ArchConfig(
+        name="hybrid-smoke", family="hybrid",
+        n_layers=8, d_model=64, n_heads=4, kv_heads=2, d_ff=96,
+        vocab=128, act="swiglu", rope_theta=0.0,
+        block_pattern=("mamba", "mamba", "mamba", "mamba", "attn",
+                       "mamba", "mamba", "mamba"),
+        moe=MoEConfig(n_experts=4, top_k=2, expert_d_ff=96, every_k_layers=2),
+        mamba=MambaConfig(d_inner=128, d_state=8, d_conv=4),
+        sub_quadratic=True, remat="none",
+    ),
+    "xlstm": ArchConfig(
+        name="xlstm-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=2, kv_heads=2, d_ff=0,
+        vocab=128, act="gelu", rope_theta=0.0, tie_embeddings=True,
+        block_pattern=("mlstm", "slstm"), sub_quadratic=True, remat="none",
+    ),
+    "enc-dec-audio": ArchConfig(
+        name="enc-dec-audio-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=128,
+        vocab=128, act="relu", norm="layernorm", rope_theta=0.0,
+        enc_dec=True, n_enc_layers=2, frontend="audio", remat="none",
+    ),
+    "vlm": ArchConfig(
+        name="vlm-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+        vocab=128, act="swiglu", frontend="vision", remat="none",
+    ),
+}
+
+# Full-size configs the analytic cost model's sanity tests need (pure
+# dataclasses — nothing is ever initialized at these sizes). Dimensions
+# follow the published model cards the deleted zoo carried.
+FULL = {
+    "dense-7b": ArchConfig(
+        name="dense-7b", family="dense",
+        n_layers=28, d_model=3072, n_heads=16, kv_heads=16, head_dim=256,
+        d_ff=24576, vocab=256000, act="geglu", tie_embeddings=True,
+        microbatches=4, remat="full",
+    ),
+    "dense-20b": ArchConfig(
+        name="dense-20b", family="dense",
+        n_layers=48, d_model=6144, n_heads=48, kv_heads=8, d_ff=16384,
+        vocab=92544, act="swiglu", microbatches=2, remat="full",
+    ),
+    "moe-14b": ArchConfig(
+        name="moe-14b", family="moe",
+        n_layers=24, d_model=2048, n_heads=16, kv_heads=16, d_ff=0,
+        vocab=151936, act="swiglu", rope_theta=1e6,
+        moe=MoEConfig(n_experts=60, top_k=4, expert_d_ff=1408,
+                      shared_d_ff=5632, every_k_layers=1),
+        microbatches=4, remat="full",
+    ),
+    "recurrent-125m": ArchConfig(
+        name="recurrent-125m", family="ssm",
+        n_layers=12, d_model=768, n_heads=4, kv_heads=4, d_ff=0,
+        vocab=50304, act="gelu", rope_theta=0.0, tie_embeddings=True,
+        block_pattern=("mlstm", "slstm"), sub_quadratic=True, remat="full",
+    ),
+}

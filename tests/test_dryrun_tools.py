@@ -87,40 +87,54 @@ ENTRY %main (p: s32[]) -> s32[] {
 
 def test_analytic_cost_model_sanity():
     from repro.launch.costs import active_params, cell_cost
-    from repro import configs
+
+    from _smoke_archs import FULL
 
     # MoE active < total
-    q = configs.get("qwen2-moe-a2.7b")
+    q = FULL["moe-14b"]
     assert active_params(q) < q.param_count()
     # dense: active == total
-    g = configs.get("gemma-7b")
+    g = FULL["dense-7b"]
     assert active_params(g) == g.param_count()
 
     # train flops ~ 3x prefill flops per token (same tokens)
-    t = cell_cost("gemma-7b", "train_4k")
-    p = cell_cost("gemma-7b", "prefill_32k")
+    t = cell_cost("dense-7b", "train_4k", cfg=g)
+    p = cell_cost("dense-7b", "prefill_32k", cfg=g)
     t_per_tok = t.flops_total / (256 * 4096) / 3
     p_per_tok = p.flops_total / (32 * 32768)
     assert 0.3 < t_per_tok / p_per_tok < 3.0  # same order (attention differs)
 
     # dp_only kills TP/FSDP collectives for a small model
-    base = cell_cost("xlstm-125m", "train_4k")
-    dp = cell_cost("xlstm-125m", "train_4k", profile="dp_only")
+    r = FULL["recurrent-125m"]
+    base = cell_cost("recurrent-125m", "train_4k", cfg=r)
+    dp = cell_cost("recurrent-125m", "train_4k", profile="dp_only", cfg=r)
     assert dp.coll_bytes_device < base.coll_bytes_device
 
     # decode hbm dominated by cache for a dense 20B at batch 128
-    dec = cell_cost("internlm2-20b", "decode_32k")
+    dec = cell_cost("dense-20b", "decode_32k", cfg=FULL["dense-20b"])
     assert dec.hbm_bytes_device > 1e9
 
 
 def test_mesh_knobs():
     from repro.launch.costs import cell_cost
 
-    a = cell_cost("internlm2-20b", "train_4k", dp=16, tp=16, microbatches=8)
-    b = cell_cost("internlm2-20b", "train_4k", dp=64, tp=4, microbatches=2)
+    from _smoke_archs import FULL
+
+    cfg = FULL["dense-20b"]
+    a = cell_cost("dense-20b", "train_4k", dp=16, tp=16, microbatches=8,
+                  cfg=cfg)
+    b = cell_cost("dense-20b", "train_4k", dp=64, tp=4, microbatches=2,
+                  cfg=cfg)
     assert b.coll_bytes_device < a.coll_bytes_device  # the §Perf direction
     # flops invariant under mesh reshapes
     assert a.flops_total == b.flops_total
+
+
+def test_cell_cost_requires_cfg():
+    from repro.launch.costs import cell_cost
+
+    with pytest.raises(ValueError, match="pass cfg= explicitly"):
+        cell_cost("dense-20b", "train_4k")
 
 
 def test_moe_expert_padding_routes_only_real_experts():

@@ -53,12 +53,13 @@ def test_elastic_plan_shrinks_model_axis(tmp_path):
 def test_run_resilient_survives_injected_failure(tmp_path):
     import jax
 
-    from repro import configs
     from repro.data.pipeline import TokenStream
     from repro.models import model as M
     from repro.training import train_loop
 
-    cfg = configs.get_smoke("phi4-mini-3.8b")
+    from _smoke_archs import SMOKES
+
+    cfg = SMOKES["dense-tied"]
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
     state = train_loop.init_state(params)
     step_fn = jax.jit(train_loop.make_train_step(cfg, base_lr=1e-3,
@@ -77,12 +78,13 @@ def test_run_resilient_survives_injected_failure(tmp_path):
 def test_run_resilient_failure_before_checkpoint_raises(tmp_path):
     import jax
 
-    from repro import configs
     from repro.data.pipeline import TokenStream
     from repro.models import model as M
     from repro.training import train_loop
 
-    cfg = configs.get_smoke("xlstm-125m")
+    from _smoke_archs import SMOKES
+
+    cfg = SMOKES["xlstm"]
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
     state = train_loop.init_state(params)
     step_fn = jax.jit(train_loop.make_train_step(cfg))

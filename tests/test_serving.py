@@ -264,6 +264,52 @@ def test_plan_cache_size_must_be_positive(net):
                     plan_cache_size=0)
 
 
+def test_warmup_compiles_once_per_bucket(net):
+    """Warmup's recompilation guard: two passes over the bucket ladder, one
+    AOT compile per unique bucket — the compiled-plan cache keys on bucket
+    size alone (the serving-layer analogue of repro.audit's jit-cache
+    harness, which cannot see AOT plans)."""
+    params, th, _ = net
+    cfg = snn_model.SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2,
+                              depth=16, mode="mttfs_cont")
+    from repro.serve import ModelHandle
+    h = ModelHandle("w", params, th, cfg, backend="dense")
+    h.warmup((1, 2, 2, 1))
+    assert h.compile_count == 2          # unique buckets only, flat on pass 2
+
+
+def test_warmup_guard_catches_unstable_plan_cache(net):
+    """If plans stop being cache hits on identical buckets (the unbounded
+    respecialization hazard), warmup must fail loudly, not serve slowly."""
+    params, th, _ = net
+    cfg = snn_model.SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2,
+                              depth=16, mode="mttfs_cont")
+    from repro.serve import ModelHandle
+    h = ModelHandle("w", params, th, cfg, backend="dense")
+    orig = h.plan_for
+
+    def evicting_plan_for(bucket):  # simulates a cache not keyed on bucket
+        h._plans.clear()
+        return orig(bucket)
+
+    h.plan_for = evicting_plan_for
+    with pytest.raises(ServeError, match="second pass recompiled"):
+        h.warmup((1, 2))
+
+
+def test_warmup_guard_skips_when_ladder_exceeds_plan_cache(net):
+    """LRU eviction on a ladder longer than the plan cache makes second-pass
+    recompiles legitimate — the guard must not false-positive there."""
+    params, th, _ = net
+    cfg = snn_model.SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=2,
+                              depth=16, mode="mttfs_cont")
+    from repro.serve import ModelHandle
+    h = ModelHandle("w", params, th, cfg, backend="dense",
+                    plan_cache_size=1)
+    h.warmup((1, 2))                     # would recompile; guard skipped
+    assert h.compile_count == 2
+
+
 def test_round_down_serves_full_bucket_then_remainder(net):
     """5 waiting on ladder (1,4,16): a full 4-batch now, 1 queued — no pad."""
     params, th, imgs = net
@@ -350,11 +396,12 @@ def test_batches_never_mix_models(net):
 # ---------------------------------------------------------------------------
 
 def test_lm_continuous_batching_smoke():
-    from repro import configs
     from repro.models import model as M
     from repro.serving.serve import Request, ServeEngine
 
-    cfg = configs.get_smoke("phi4-mini-3.8b")
+    from _smoke_archs import SMOKES
+
+    cfg = SMOKES["dense-tied"]
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(params, cfg, slots=2, max_seq=32)
     reqs = [Request(rid=i, prompt=[3, 1, 4, 1 + i], max_tokens=3)

@@ -62,11 +62,12 @@ def test_microbatching_matches_full_batch():
     """microbatches=2 gives the same update as one full batch (mean grads)."""
     import dataclasses
 
-    from repro import configs
     from repro.models import model as M
     from repro.training import train_loop
 
-    cfg1 = configs.get_smoke("phi4-mini-3.8b")
+    from _smoke_archs import SMOKES
+
+    cfg1 = SMOKES["dense-tied"]
     cfg2 = dataclasses.replace(cfg1, microbatches=2)
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg1)
 
