@@ -71,6 +71,18 @@ def collect_traced(root: str) -> list[Finding]:
             findings += jaxpr_rules.check_no_int8_dequant(
                 f"backend:{name}", closed, root)
 
+    # the direct-training path: the loss forward obeys batch purity with the
+    # dense backend's declared loss reductions; the full grad step is exempt
+    # from the count (weight grads contract the batch) but keeps dtype +
+    # host-sync discipline
+    train_declared = engine.BACKEND_CONTRACTS["dense"].train_loss_reductions
+    for name, closed in probe.trace_train_step(cfg).items():
+        findings += jaxpr_rules.check_dtypes(name, closed, root)
+        findings += jaxpr_rules.check_host_sync(name, closed, root)
+        if name.startswith("training.loss_fn"):
+            findings += jaxpr_rules.check_batch_purity(
+                name, closed, tainted, train_declared, root)
+
     # the int8 discipline, against each quant path's declared contract
     from .contracts import QuantContract
     for name, closed in probe.trace_quant_kernels().items():

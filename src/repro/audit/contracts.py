@@ -71,6 +71,14 @@ class BackendContract:
     is declared — queue_sparse's occupancy stats fn owns the only two.
     ``host_dispatch`` backends are traced per jitted piece rather than as
     one batched plan (the plan walk itself runs in Python on the host).
+
+    ``train_loss_reductions``: for a backend that owns a differentiable
+    training walk (``engine.train_forward`` — dense only), the number of
+    batch-axis reductions its *loss forward* contains by design (batch-mean
+    loss terms). ``None`` = the backend declares no training path; tracing
+    one for it is itself a contract violation. The backward pass is
+    exempted from the count — weight gradients legitimately contract the
+    batch axis — but still gets the dtype/host-sync rules.
     """
 
     name: str
@@ -78,3 +86,4 @@ class BackendContract:
     host_dispatch: bool = False
     quant: QuantContract | None = None
     allowed_host_syncs: tuple = ()
+    train_loss_reductions: int | None = None

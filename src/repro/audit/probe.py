@@ -112,6 +112,40 @@ def trace_sparse_pieces(cfg: engine.SNNConfig | None = None,
     }
 
 
+def trace_train_step(cfg: engine.SNNConfig | None = None,
+                     B: int = B_PROBE) -> dict:
+    """Traces of the direct-training path (``repro.training.surrogate``).
+
+    Two programs at the probe geometry:
+
+    - ``training.loss_fn`` — the loss *forward* (surrogate spike dynamics +
+      count target + rate regularizer). Batch purity runs against
+      ``BackendContract.train_loss_reductions`` on this one: the loss's own
+      batch-mean reductions are the only legal batch eliminations.
+    - ``training.train_step`` — the full value_and_grad + AdamW update.
+      Only dtype/host-sync rules apply: the backward pass legitimately
+      contracts the batch axis into every weight gradient.
+    """
+    from ..training.surrogate import make_snn_train_step
+    from ..training.optimizer import adamw_init
+
+    cfg = cfg or probe_config()
+    plan = engine.compile_plan(cfg.spec, cfg.input_hw, cfg.input_c,
+                               cfg.compressed)
+    params = probe_params(plan)
+    step, loss_fn = make_snn_train_step(
+        cfg, probe_thresholds(plan), target="count", rate_reg=0.01)
+    images = probe_images(cfg, B)
+    labels = jnp.zeros((B,), jnp.int32)
+    opt = adamw_init(params)
+    return {
+        "training.loss_fn[count+rate_reg]": jax.make_jaxpr(loss_fn)(
+            params, images, labels),
+        "training.train_step": jax.make_jaxpr(step)(
+            params, opt, images, labels),
+    }
+
+
 def trace_quant_kernels(cfg: engine.SNNConfig | None = None) -> dict:
     """Traces of every int8-weight path, checked against QuantContract."""
     from ..kernels import ref as kref

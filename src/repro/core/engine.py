@@ -53,7 +53,8 @@ from . import encoding
 from .aeq import (AEQ, aeq_from_raster, phase_occupancy, segment_keep,
                   span_map)
 from .encoding import AEFormat, encode_ttfs
-from .neuron import NeuronModel, _on_registry_change, get_neuron_model
+from .neuron import (NeuronModel, _on_registry_change, get_neuron_model,
+                     surrogate_model)
 from .snn_layers import dense_conv_hwc, event_conv2d, spike_maxpool_hwc
 
 # Engine-internal raster layout: (T, H, W, C) — channels-last end to end, so
@@ -376,7 +377,8 @@ def _conv_step(cp: ConvPlan, model: NeuronModel, vth):
         sp = sp.astype(v.dtype)                            # (H, W, C_out)
         if cp.pool:
             sp, p_latch = spike_maxpool_hwc(
-                sp, cp.pool, p_latch, latch_once=model.pool_latch_once)
+                sp, cp.pool, p_latch, latch_once=model.pool_latch_once,
+                straight_through=model.straight_through)
             return (v, latch, p_latch), sp
         return (v, latch), sp
 
@@ -959,6 +961,71 @@ def _execute_batch(plan: LayerPlan, backend: Backend, cfg: SNNConfig,
     return logits, stats
 
 
+# ---------------------------------------------------------------------------
+# Differentiable plan walk (direct SNN training — repro.training.surrogate)
+# ---------------------------------------------------------------------------
+
+def _execute_diff(plan: LayerPlan, model: NeuronModel, cfg: SNNConfig,
+                  params, thresholds, image):
+    """Per-sample grad-capable walk of the dense plan.
+
+    Runs the exact dynamics of ``DenseBackend`` (one T-batched conv +
+    ``lax.scan`` time loop per conv stage, shared ``_conv_step`` body) under
+    a surrogate :class:`~repro.core.neuron.NeuronModel`, skipping the
+    integer stats accounting that would sit dead in a gradient. Returns
+    ``(step_out, rates)``:
+
+    - ``step_out`` (T, n_out): the output layer's per-time-step membrane
+      contribution; its sum over T equals the inference logits, and its
+      time resolution is what the ``train``/``latency`` loss targets need.
+    - ``rates`` (n_convs,): mean float spike rate per conv layer — the
+      differentiable event count behind the spike-rate regularizer (the
+      recorded int stats are casts and carry no gradient).
+    """
+    raster, analog = _encode_input(cfg, image)
+    rates = []
+    for cp in plan.convs:
+        w, b = params[cp.index]["w"], params[cp.index]["b"]
+        if raster is not None:
+            cur = jax.lax.conv_general_dilated(
+                raster.astype(w.dtype), w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        else:
+            c1 = dense_conv_hwc(analog, w) + b
+            cur = jnp.broadcast_to(c1, (cfg.T,) + c1.shape)
+        step = _conv_step(cp, model, thresholds[cp.index])
+        carry = _init_carry(cp, cfg, thresholds[cp.index], w.dtype)
+        _, raster = jax.lax.scan(step, carry, cur)
+        analog = None
+        rates.append(raster.mean())
+
+    out = params[plan.out.index]
+    flat = raster.reshape(cfg.T, -1)
+    step_out = flat @ out["w"] + out["b"]            # (T, n_out)
+    return step_out, jnp.stack(rates)
+
+
+def train_forward(params, thresholds, cfg: SNNConfig, images, *,
+                  surrogate: str = "superspike", beta: float = 10.0):
+    """Batched differentiable forward through the engine's dense plan.
+
+    ``jax.grad`` of any scalar built from the outputs flows back through
+    the ``lax.scan`` time loop via the surrogate spike derivative
+    registered for ``cfg.mode`` (``neuron.surrogate_model``); the forward
+    values are bit-identical to the hard dynamics, so the net being
+    trained is exactly the net ``infer_batch`` will execute.
+
+    Returns ``(step_logits (B, T, n_out), rates (B, n_convs))``. Traceable
+    (compose under jit/grad); deliberately not jitted here — the training
+    step owns the compilation boundary.
+    """
+    plan = compile_plan(cfg.spec, cfg.input_hw, cfg.input_c, cfg.compressed)
+    model = surrogate_model(cfg.mode, surrogate, beta)
+    walk = functools.partial(_execute_diff, plan, model, cfg)
+    return jax.vmap(walk, in_axes=(None, None, 0))(
+        params, tuple(thresholds), images)
+
+
 @functools.lru_cache(maxsize=None)
 def _runner(cfg: SNNConfig, backend_name: str, batched: bool):
     """One jit-compiled executable per (config, backend, batched) triple.
@@ -1108,7 +1175,11 @@ register_backend("queue_sparse", SparseQueueBackend())
 # count, both feeding the bucket choice, never the numerics). A backend
 # registered without a contract fails the audit at lookup time.
 BACKEND_CONTRACTS: dict[str, BackendContract] = {
-    "dense": BackendContract(name="dense"),
+    # dense additionally owns the differentiable training walk
+    # (``train_forward``); its loss forward reduces over the batch exactly
+    # twice by design — the batch-mean classification loss and the
+    # batch-mean spike-rate regularizer (see ``audit.probe.trace_train_step``)
+    "dense": BackendContract(name="dense", train_loss_reductions=2),
     "dense_unrolled": BackendContract(name="dense_unrolled"),
     "queue": BackendContract(name="queue"),
     "queue_pallas": BackendContract(name="queue_pallas"),

@@ -17,6 +17,12 @@ neuron variant is a one-file change: write a fire function and call
 :func:`register_neuron_model` — the engine, both backends, and the stats
 accounting pick it up without modification.
 
+For direct SNN training (``repro.training.surrogate``) each built-in mode
+also registers a *differentiable* fire builder: :func:`surrogate_model`
+returns a forward-identical :class:`NeuronModel` whose spikes carry a
+surrogate gradient (straight-through over a registered smooth relaxation),
+so ``jax.grad`` flows through the dense backend's ``lax.scan`` time loop.
+
 All functions are pure and jit/vmap/scan friendly.
 """
 from __future__ import annotations
@@ -24,6 +30,7 @@ from __future__ import annotations
 from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
+from jax import lax
 
 # fire(v_mem_after_input, latch, v_thresh) -> (v_mem, spikes_bool, latch)
 FireFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray],
@@ -44,6 +51,10 @@ class NeuronModel(NamedTuple):
     name: str
     fire: FireFn
     pool_latch_once: bool
+    # surrogate-gradient models emit float 0/1 spikes whose value is exactly
+    # the hard fire's but whose gradient is the registered surrogate; the
+    # fused max-pool must then use its differentiable form too
+    straight_through: bool = False
 
 
 _REGISTRY: dict[str, NeuronModel] = {}
@@ -121,6 +132,206 @@ register_neuron_model("mttfs_cont", _fire_mttfs_cont)
 # import-time snapshot of the built-ins, derived from the registry so a new
 # built-in automatically joins every MODES-parametrized test sweep
 MODES = tuple(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Surrogate gradients (direct SNN training)
+# ---------------------------------------------------------------------------
+#
+# A surrogate is a named pair (primal, grad): ``primal(x, beta)`` is a smooth
+# relaxation of the Heaviside step (-> step as beta -> inf) and ``grad`` is
+# its exact analytic derivative (tests/test_surrogate.py pins grad against
+# central differences of primal). :func:`spike_fn` builds the straight-
+# through spike: forward value is *bit-exactly* the hard ``x > 0`` spike,
+# backward is ``grad(x, beta)``.
+
+class Surrogate(NamedTuple):
+    """A registered surrogate derivative for the spike nonlinearity.
+
+    ``clamp_width`` is the support half-width of ``grad`` in units of
+    ``1/beta`` (``None`` = unbounded support): outside ``|x| >
+    clamp_width/beta`` the gradient is exactly zero, which is the clamp
+    window the straight-through estimator family uses.
+    """
+
+    name: str
+    primal: Callable  # p(x, beta): smooth relaxation of heaviside(x)
+    grad: Callable    # d p / d x (exact)
+    clamp_width: float | None
+
+
+_SURROGATES: dict[str, Surrogate] = {}
+
+
+def register_surrogate(name: str, primal: Callable, grad: Callable, *,
+                       clamp_width: float | None = None,
+                       overwrite: bool = False) -> Surrogate:
+    """Register a surrogate derivative for use as a training ``surrogate=``."""
+    if name in _SURROGATES and not overwrite:
+        raise ValueError(f"surrogate {name!r} already registered")
+    sg = Surrogate(name=name, primal=primal, grad=grad,
+                   clamp_width=clamp_width)
+    _SURROGATES[name] = sg
+    for hook in _on_registry_change:
+        hook()
+    return sg
+
+
+def get_surrogate(name: str) -> Surrogate:
+    try:
+        return _SURROGATES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown surrogate {name!r}; registered surrogates: "
+            f"{sorted(_SURROGATES)}") from None
+
+
+def available_surrogates() -> tuple[str, ...]:
+    return tuple(sorted(_SURROGATES))
+
+
+def _triangle_primal(x, beta):
+    # piecewise-quadratic hard sigmoid: the antiderivative of the triangle
+    # window, so grad is exactly zero outside |x| >= 1/beta
+    bx = beta * x
+    inner = 0.5 + bx - jnp.sign(x) * 0.5 * bx * bx
+    return jnp.clip(jnp.where(jnp.abs(bx) >= 1.0,
+                              (jnp.sign(x) + 1.0) * 0.5, inner), 0.0, 1.0)
+
+
+def _triangle_grad(x, beta):
+    return beta * jnp.maximum(0.0, 1.0 - jnp.abs(beta * x))
+
+
+def _superspike_primal(x, beta):
+    # fast sigmoid (Zenke & Ganguli SuperSpike): x/(1+|x|) rescaled to (0,1)
+    bx = beta * x
+    return 0.5 * (1.0 + bx / (1.0 + jnp.abs(bx)))
+
+
+def _superspike_grad(x, beta):
+    denom = 1.0 + jnp.abs(beta * x)
+    return 0.5 * beta / (denom * denom)
+
+
+def _stable_sigmoid(x):
+    # jnp has no sigmoid; tanh form avoids exp overflow on large |x|
+    return 0.5 * (jnp.tanh(0.5 * x) + 1.0)
+
+
+def _sigmoid_primal(x, beta):
+    return _stable_sigmoid(beta * x)
+
+
+def _sigmoid_grad(x, beta):
+    s = _stable_sigmoid(beta * x)
+    return beta * s * (1.0 - s)
+
+
+register_surrogate("triangle", _triangle_primal, _triangle_grad,
+                   clamp_width=1.0)
+register_surrogate("superspike", _superspike_primal, _superspike_grad)
+register_surrogate("sigmoid", _sigmoid_primal, _sigmoid_grad)
+
+# import-time snapshot (same convention as MODES)
+SURROGATES = tuple(_SURROGATES)
+
+
+def spike_fn(surrogate: str, beta: float) -> Callable:
+    """The straight-through spike ``x -> heaviside(x)`` for one surrogate.
+
+    Forward is bit-exactly ``(x > 0).astype(x.dtype)`` — ``soft -
+    stop_gradient(soft)`` is an exact float zero — so a surrogate model
+    runs the *same* dynamics as the hard one; only gradients differ.
+    """
+    sg = get_surrogate(surrogate)
+
+    def spike(x):
+        soft = sg.primal(x, jnp.asarray(beta, x.dtype))
+        hard = (x > 0).astype(x.dtype)
+        return hard + (soft - lax.stop_gradient(soft))
+
+    return spike
+
+
+# mode name -> builder(spike) -> differentiable FireFn. The spikes come out
+# float (exact 0/1 values) instead of bool; state updates keep the hard
+# semantics where gradients cannot meaningfully flow (bool latches).
+_SURROGATE_FIRE: dict[str, Callable] = {}
+
+
+def register_surrogate_fire(mode: str, builder: Callable, *,
+                            overwrite: bool = False) -> None:
+    """Register the differentiable fire builder for neuron ``mode``.
+
+    ``builder(spike)`` receives the straight-through spike function and
+    returns a :data:`FireFn` that is forward-identical to the mode's hard
+    fire. Registration invalidates compiled-runner caches like
+    :func:`register_neuron_model` does.
+    """
+    if mode in _SURROGATE_FIRE and not overwrite:
+        raise ValueError(f"surrogate fire for mode {mode!r} already registered")
+    _SURROGATE_FIRE[mode] = builder
+    for hook in _on_registry_change:
+        hook()
+
+
+def surrogate_model(mode: str, surrogate: str = "superspike",
+                    beta: float = 10.0) -> NeuronModel:
+    """A forward-identical, differentiable variant of neuron ``mode``.
+
+    The returned model plugs into the engine's dense plan walk
+    (``engine.train_forward``); ``jax.grad`` through it sees the surrogate
+    derivative at every fire site while the computed spikes, membranes and
+    latches match the hard model bit for bit.
+    """
+    base = get_neuron_model(mode)
+    try:
+        builder = _SURROGATE_FIRE[mode]
+    except KeyError:
+        raise ValueError(
+            f"neuron mode {mode!r} has no surrogate fire registered; "
+            f"modes with one: {sorted(_SURROGATE_FIRE)}") from None
+    return NeuronModel(
+        name=f"{mode}~{surrogate}", fire=builder(spike_fn(surrogate, beta)),
+        pool_latch_once=base.pool_latch_once, straight_through=True)
+
+
+def _sg_fire_if_reset(spike):
+    def fire(v, latch, vth):
+        sp = spike(v - jnp.asarray(vth, v.dtype))
+        # reset-to-zero as a multiplicative gate: value-identical to
+        # where(crossed, 0, v) (sp is exactly 0/1), and the reset itself
+        # contributes -v * d(sp)/dv to the membrane gradient
+        v = v * (1.0 - sp)
+        return v, sp, latch | (sp > 0)
+
+    return fire
+
+
+def _sg_fire_mttfs(spike):
+    def fire(v, latch, vth):
+        sp = spike(v - jnp.asarray(vth, v.dtype))
+        # spike-once gate: the bool latch carries no gradient (standard
+        # SuperSpike practice — the first-spike selection is treated as
+        # constant), the crossing itself does
+        sp = sp * (1.0 - latch.astype(v.dtype))
+        return v, sp, latch | (v > jnp.asarray(vth, v.dtype))
+
+    return fire
+
+
+def _sg_fire_mttfs_cont(spike):
+    def fire(v, latch, vth):
+        sp = spike(v - jnp.asarray(vth, v.dtype))
+        return v, sp, latch | (sp > 0)
+
+    return fire
+
+
+register_surrogate_fire("if_reset", _sg_fire_if_reset)
+register_surrogate_fire("mttfs", _sg_fire_mttfs)
+register_surrogate_fire("mttfs_cont", _sg_fire_mttfs_cont)
 
 
 # ---------------------------------------------------------------------------

@@ -112,16 +112,27 @@ def spike_maxpool_hwc(
     latch: jnp.ndarray,       # (H_out, W_out, C) bool — already-fired outputs
     *,
     latch_once: bool = True,
+    straight_through: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """:func:`spike_maxpool` in the engine's channels-last layout.
 
     Same OR-pooling semantics; HWC avoids the per-step transpose on the
     engine's hot path (XLA CPU/TPU convs are channels-last native).
+
+    ``straight_through`` keeps the pooled output differentiable for the
+    surrogate-gradient training path: with exact-0/1 float input spikes the
+    windowed max *is* the OR (identical values), and the spike-once gate
+    multiplies by ``1 - latch`` instead of masking through a boolean — the
+    latch itself stays hard (bool, no gradient), matching the surrogate
+    fire functions in ``core/neuron.py``.
     """
     H, W, C = spikes.shape
     Ho, Wo = H // window, W // window
     s = spikes[: Ho * window, : Wo * window, :]
     s = s.reshape(Ho, window, Wo, window, C).max(axis=(1, 3))
+    if straight_through:
+        fired = s * (1.0 - latch.astype(s.dtype)) if latch_once else s
+        return fired, latch | (s > 0)
     if latch_once:
         fired = (s > 0) & ~latch
     else:

@@ -1,6 +1,7 @@
 """The staged, cached Study API — the paper's experiment as a pipeline.
 
     spec → train → convert → collect → price → report
+                   (or train_snn, when spec.training="direct")
 
 One :class:`StudySpec` declares a study point; :func:`run` executes the
 chain; :func:`sweep` prices variants against shared recorded stats. See
@@ -10,7 +11,7 @@ onto sweeps. ``comparison.run_study`` survives as a deprecation shim over
 """
 from ..core.energy import reprice as price_stats  # noqa: F401
 from .artifacts import (CollectArtifact, ConvertArtifact,  # noqa: F401
-                        StatsRecord, TrainArtifact)
+                        DirectTrainArtifact, StatsRecord, TrainArtifact)
 from .cache import DEFAULT_CACHE, StudyCache, content_key  # noqa: F401
 from .report import Report, sweep_rows  # noqa: F401
 from .spec import (StudySpec, StudySpecError, UnknownBackendError,  # noqa: F401
@@ -18,7 +19,7 @@ from .spec import (StudySpec, StudySpecError, UnknownBackendError,  # noqa: F401
                    UnknownNeuronModeError)
 from .stages import (collect, convert, fit_cnn, from_params,  # noqa: F401
                      price, price_record, reset_stage_counts, run,
-                     run_with_data, stage_counts, sweep, train)
+                     run_with_data, stage_counts, sweep, train, train_snn)
 
 # the sweep *runner* module (python -m repro.study.sweep). Importing it
 # binds the package attribute ``sweep`` to the module — shadowing the stage
@@ -37,9 +38,10 @@ __all__ = [
     "StudySpec", "StudySpecError", "UnknownDatasetError",
     "UnknownBackendError", "UnknownNeuronModeError", "UnknownInputModeError",
     "StudyCache", "DEFAULT_CACHE", "content_key",
-    "TrainArtifact", "ConvertArtifact", "CollectArtifact", "StatsRecord",
+    "TrainArtifact", "ConvertArtifact", "DirectTrainArtifact",
+    "CollectArtifact", "StatsRecord",
     "Report", "sweep_rows", "price_stats",
-    "train", "convert", "collect", "price", "price_record", "run",
-    "run_with_data", "sweep",
+    "train", "train_snn", "convert", "collect", "price", "price_record",
+    "run", "run_with_data", "sweep",
     "fit_cnn", "from_params", "stage_counts", "reset_stage_counts",
 ]

@@ -29,6 +29,19 @@ class ConvertArtifact(NamedTuple):
     key: str
 
 
+class DirectTrainArtifact(NamedTuple):
+    """Output of the ``train_snn`` stage: the surrogate-gradient-trained SNN.
+
+    Field-compatible with :class:`ConvertArtifact` on purpose — ``collect``
+    (and everything downstream) consumes ``snn_params``/``thresholds``
+    without knowing whether the net was converted or trained directly.
+    """
+
+    snn_params: list        # directly trained weights (same pytree layout)
+    thresholds: list        # unit thresholds (the net is trained to them)
+    key: str
+
+
 class StatsRecord(NamedTuple):
     """Raw per-sample SNNStats, stacked over the eval set (N samples).
 

@@ -78,7 +78,7 @@ class StudyCache:
     """
 
     def __init__(self, dir: str | None = None,
-                 disk_kinds: tuple = ("train", "convert"),
+                 disk_kinds: tuple = ("train", "convert", "train_snn"),
                  mem_caps: dict | None = None):
         self.dir = dir
         self.disk_kinds = disk_kinds

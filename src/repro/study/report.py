@@ -70,12 +70,14 @@ class Report:
             "per_class_spikes": {str(k): float(v)
                                  for k, v in self.per_class_spikes.items()},
         }
+        out["snn_events_median"] = float(np.median(self.events_per_sample))
         if self.spec is not None:
             out["pricing"] = {
                 "compressed": self.spec.compressed,
                 "vmem_resident": self.spec.vmem_resident,
                 "weight_bits": self.spec.weight_bits,
             }
+            out["training"] = getattr(self.spec, "training", "convert")
         return out
 
     def label(self) -> str:

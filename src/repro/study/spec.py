@@ -19,6 +19,10 @@ train                   dataset, net, input_hw/c, n_train, train_seed,
                         train_act_bits, init_seed
 convert                 percentile, n_calib, balance (+ T, mode, input_mode,
                         input_theta, v_init_frac when balance=True)
+train_snn               training="direct" only: snn_epochs, snn_batch,
+                        snn_lr, surrogate, sg_beta, loss_target, rate_reg,
+                        snn_init_seed (+ T, mode, input encoding fields —
+                        the dynamics are trained through)
 collect                 T, depth, mode, input_mode, input_theta, v_init_frac,
                         backend, batch, n_eval, eval_seed (+ weight_bits on
                         the backends that execute it — see below)
@@ -92,6 +96,23 @@ class StudySpec:
     balance: bool = True              # greedy threshold balancing
     n_balance: int = 128              # calibration samples used by balancing
 
+    # --- how the SNN's weights come to be --------------------------------
+    # "convert": ANN->SNN conversion of the trained CNN (the paper's
+    # pipeline); "direct": surrogate-gradient training through the engine
+    # (repro.training.surrogate), which replaces convert with the train_snn
+    # stage. The CNN baseline is trained either way (it is the comparison).
+    training: str = "convert"
+
+    # --- train_snn stage (used only when training="direct") --------------
+    snn_epochs: int = 4
+    snn_batch: int = 128
+    snn_lr: float = 5e-3
+    surrogate: str = "superspike"     # core/neuron.py surrogate registry
+    sg_beta: float = 10.0             # surrogate sharpness
+    loss_target: str = "count"        # repro.training.surrogate.VALID_TARGETS
+    rate_reg: float = 0.0             # spike-rate regularizer weight
+    snn_init_seed: int = 0
+
     # --- collect stage (SNN execution) -----------------------------------
     T: int = 4
     depth: int = 256                  # AEQ depth per (t, c, phase) segment
@@ -152,8 +173,24 @@ class StudySpec:
                 f"unknown input_mode {self.input_mode!r} "
                 "(expected 'analog' or 'binary')")
 
+        if self.training not in ("convert", "direct"):
+            raise StudySpecError(
+                f"unknown training {self.training!r} "
+                "(expected 'convert' or 'direct')")
+        try:
+            neuron.get_surrogate(self.surrogate)
+        except ValueError as e:
+            raise StudySpecError(str(e)) from None
+        from ..training.surrogate import VALID_TARGETS
+
+        if self.loss_target not in VALID_TARGETS:
+            raise StudySpecError(
+                f"unknown loss_target {self.loss_target!r}; valid targets: "
+                f"{VALID_TARGETS}")
+
         for name in ("n_train", "n_eval", "n_calib", "epochs", "train_batch",
-                     "T", "depth", "batch", "n_balance"):
+                     "T", "depth", "batch", "n_balance", "snn_epochs",
+                     "snn_batch"):
             v = getattr(self, name)
             if not isinstance(v, int) or v < 1:
                 raise StudySpecError(

@@ -33,8 +33,9 @@ from ..core import conversion, encoding, engine
 from ..core.cnn_baseline import cnn_costs, cnn_forward, make_train_step
 from ..core.energy import STATIC_POWER_W, cnn_energy, reprice
 from ..core.snn_model import init_params
-from .artifacts import (CollectArtifact, ConvertArtifact, StatsRecord,
-                        TrainArtifact)
+from ..training import surrogate as surrogate_training
+from .artifacts import (CollectArtifact, ConvertArtifact, DirectTrainArtifact,
+                        StatsRecord, TrainArtifact)
 from .cache import DEFAULT_CACHE, content_key
 from .report import Report
 from .spec import StudySpec
@@ -116,6 +117,60 @@ def from_params(params) -> TrainArtifact:
 
 
 # ---------------------------------------------------------------------------
+# train_snn (direct surrogate-gradient training — the convert alternative)
+# ---------------------------------------------------------------------------
+
+def train_snn(spec: StudySpec, *, cache=None) -> DirectTrainArtifact:
+    """Train the SNN directly with surrogate gradients (``training="direct"``).
+
+    Sits where ``convert`` sits in the pipeline — its artifact is
+    field-compatible, so ``collect``/``price`` consume it unchanged — but
+    the weights come from :func:`repro.training.surrogate.fit_snn` running
+    ``jax.grad`` through the engine's own dense plan, not from rescaling a
+    trained CNN. The key covers the *dynamics* fields (T, mode, input
+    encoding) because the network is trained through them: a different T is
+    a different training problem, unlike conversion where T only keys
+    balancing.
+
+    Cached like ``train``: content-hash keyed over recipe + pixels, disk
+    round-trip through numpy pickles, execution tallied in
+    ``stage_counts["train_snn"]`` (and optimizer steps in
+    ``repro.training.surrogate.step_counts`` — a cache hit runs zero).
+    """
+    cache = cache or DEFAULT_CACHE
+    images, labels = spec.load_train()
+    key = content_key(
+        "train-snn-v1", spec.dataset, spec.net, spec.input_hw, spec.input_c,
+        spec.T, spec.mode, spec.input_mode, spec.input_theta,
+        spec.v_init_frac, spec.snn_epochs, spec.snn_batch, spec.snn_lr,
+        spec.surrogate, spec.sg_beta, spec.loss_target, spec.rate_reg,
+        spec.snn_init_seed, images, labels)
+
+    def build():
+        stage_counts["train_snn"] += 1
+        params, thresholds, _ = surrogate_training.fit_snn(
+            spec.net, images, labels, T=spec.T, mode=spec.mode,
+            input_mode=spec.input_mode, input_theta=spec.input_theta,
+            v_init_frac=spec.v_init_frac, epochs=spec.snn_epochs,
+            batch=spec.snn_batch, lr=spec.snn_lr, target=spec.loss_target,
+            rate_reg=spec.rate_reg, surrogate=spec.surrogate,
+            beta=spec.sg_beta, init_seed=spec.snn_init_seed)
+        return DirectTrainArtifact(params, thresholds, key)
+
+    def save(a):
+        return {"snn_params": _params_to_np(a.snn_params),
+                "thresholds": [np.asarray(t) for t in a.thresholds]}
+
+    def load(p):
+        return DirectTrainArtifact(
+            _params_to_jnp(p["snn_params"]),
+            [jnp.asarray(t) for t in p["thresholds"]], key)
+
+    return cache.get_or_build("train_snn", key, build, tag=spec.dataset,
+                              save=save, load=load)
+
+
+# ---------------------------------------------------------------------------
 # convert
 # ---------------------------------------------------------------------------
 
@@ -177,7 +232,8 @@ def convert(spec: StudySpec, trained: TrainArtifact | None = None, *,
 # collect
 # ---------------------------------------------------------------------------
 
-def collect(spec: StudySpec, converted: ConvertArtifact | None = None, *,
+def collect(spec: StudySpec,
+            converted: ConvertArtifact | DirectTrainArtifact | None = None, *,
             images=None, cache=None) -> CollectArtifact:
     """Run the SNN over the eval set once; record raw per-sample stats.
 
@@ -196,7 +252,9 @@ def collect(spec: StudySpec, converted: ConvertArtifact | None = None, *,
     """
     cache = cache or DEFAULT_CACHE
     if converted is None:
-        converted = convert(spec, cache=cache)
+        converted = (train_snn(spec, cache=cache)
+                     if spec.training == "direct"
+                     else convert(spec, cache=cache))
     if images is None:
         eval_images, _ = spec.load_eval()
         images = jnp.asarray(eval_images)
@@ -334,10 +392,19 @@ def price(spec: StudySpec, collected: CollectArtifact,
 # ---------------------------------------------------------------------------
 
 def run(spec: StudySpec, *, cache=None) -> Report:
-    """The full staged pipeline for one spec (dataset-driven data)."""
+    """The full staged pipeline for one spec (dataset-driven data).
+
+    ``spec.training`` selects where the SNN weights come from: ``"convert"``
+    rescales the trained CNN (the paper pipeline), ``"direct"`` trains the
+    SNN itself via :func:`train_snn`. The CNN trains either way — it is the
+    other half of every comparison row.
+    """
     cache = cache or DEFAULT_CACHE
     trained = train(spec, cache=cache)
-    converted = convert(spec, trained, cache=cache)
+    if spec.training == "direct":
+        converted = train_snn(spec, cache=cache)
+    else:
+        converted = convert(spec, trained, cache=cache)
     eval_images, eval_labels = spec.load_eval()
     collected = collect(spec, converted, images=jnp.asarray(eval_images),
                         cache=cache)

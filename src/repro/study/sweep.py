@@ -66,28 +66,47 @@ QUICK_OVERRIDES = dict(n_train=192, epochs=1, train_batch=64, n_eval=32,
 
 
 def paper_grid(*, quick: bool = False, datasets=None, backends=None,
-               pricing=None, overrides=None) -> list[StudySpec]:
+               pricing=None, overrides=None,
+               direct: bool = False) -> list[StudySpec]:
     """The grid as a cell list, ordered so pricing variants are adjacent.
 
     Cells group by (dataset, backend) with all pricing variants of a pair
     consecutive: a kill boundary then strands at most one collect artifact
     mid-flight, and the sweep's cache turns every later variant of an
     already-collected pair into pure repricing.
+
+    ``direct=True`` doubles the grid along the *training* axis: every
+    (dataset, backend) pair gets its pricing variants once with the
+    converted SNN (``training="convert"``) and once with the
+    surrogate-gradient-trained one (``training="direct"``), consecutively —
+    so each training variant still shares one collect, and
+    :func:`markdown_grid` can emit the converted-vs-direct pairing section.
     """
     datasets = DATASETS if datasets is None else tuple(datasets)
     backends = (("dense",) if quick else BACKENDS) if backends is None \
         else tuple(backends)
     pricing = (QUICK_PRICING if quick else PRICING) if pricing is None \
         else tuple(pricing)
+    trainings = ("convert", "direct") if direct else ("convert",)
     extra = dict(QUICK_OVERRIDES) if quick else {}
     extra.update(overrides or {})
+    if quick and direct:
+        # smoke-scale direct training (CI budget, ~10s/net on CPU): enough
+        # epochs + rate penalty to beat the 1-epoch converted baseline on
+        # the procedural sets while emitting fewer events
+        extra.setdefault("snn_epochs", 6)
+        extra.setdefault("snn_batch", 64)
+        extra.setdefault("snn_lr", 1e-2)
+        extra.setdefault("rate_reg", 0.02)
     cells = []
     for ds in datasets:
         for backend in backends:
-            for compressed, vmem, wbits in pricing:
-                cells.append(StudySpec(
-                    dataset=ds, backend=backend, compressed=compressed,
-                    vmem_resident=vmem, weight_bits=wbits, **extra))
+            for training in trainings:
+                for compressed, vmem, wbits in pricing:
+                    cells.append(StudySpec(
+                        dataset=ds, backend=backend, training=training,
+                        compressed=compressed, vmem_resident=vmem,
+                        weight_bits=wbits, **extra))
     return cells
 
 
@@ -227,24 +246,80 @@ def run_sweep(cells, *, out_dir: str, cache: StudyCache | None = None,
 
 
 def markdown_grid(cell_rows) -> str:
-    """The consolidated grid as a markdown table (one row per cell)."""
-    header = ("| dataset | backend | pricing | snn_acc | cnn_acc "
+    """The consolidated grid as a markdown table (one row per cell).
+
+    When the rows carry both training variants (a ``--direct`` sweep), a
+    second **converted vs direct** table pairs cells identical up to
+    ``training`` and reports the accuracy delta and the event-count ratio —
+    the direct-training headline (can surrogate training buy back the
+    conversion gap, and at what event budget?).
+    """
+    header = ("| dataset | backend | snn | pricing | snn_acc | cnn_acc "
               "| snn E med (J) | cnn E (J) | snn FPS/W med | cnn FPS/W "
               "| overflow |\n"
-              "|---|---|---|---|---|---|---|---|---|---|\n")
+              "|---|---|---|---|---|---|---|---|---|---|---|\n")
     lines = []
     for row in cell_rows:
         s, r = row["spec"], row["report"]
         pricing = (("c" if s["compressed"] else "u") + "+"
                    + ("VMEM" if s["vmem_resident"] else "HBM")
                    + f"+w{s['weight_bits']}")
+        training = s.get("training", "convert")
         lines.append(
-            f"| {s['dataset']} | {s['backend']} | {pricing} "
+            f"| {s['dataset']} | {s['backend']} | {training} | {pricing} "
             f"| {r['snn_acc']:.3f} | {r['cnn_acc']:.3f} "
             f"| {r['snn_energy_j_deciles'][3]:.3g} | {r['cnn_energy_j']:.3g} "
             f"| {r['snn_fps_per_w_deciles'][3]:.0f} "
             f"| {r['cnn_fps_per_w']:.0f} | {r['overflow']} |")
-    return "# Paper grid — SNN vs CNN\n\n" + header + "\n".join(lines) + "\n"
+    md = "# Paper grid — SNN vs CNN\n\n" + header + "\n".join(lines) + "\n"
+    pairs = _pair_trainings(cell_rows)
+    if pairs:
+        md += ("\n## Converted vs direct\n\n"
+               "| dataset | backend | pricing | conv acc | direct acc "
+               "| Δacc | direct/conv E med | direct/conv events |\n"
+               "|---|---|---|---|---|---|---|---|\n")
+        plines = []
+        for key, conv, direct in pairs:
+            ds, backend, pricing = key
+            rc, rd = conv["report"], direct["report"]
+            e_ratio = (rd["snn_energy_j_deciles"][3]
+                       / max(rc["snn_energy_j_deciles"][3], 1e-30))
+            ev_c = rc.get("snn_events_median", 0.0)
+            ev_d = rd.get("snn_events_median", 0.0)
+            ev_ratio = ev_d / max(ev_c, 1e-30)
+            plines.append(
+                f"| {ds} | {backend} | {pricing} "
+                f"| {rc['snn_acc']:.3f} | {rd['snn_acc']:.3f} "
+                f"| {rd['snn_acc'] - rc['snn_acc']:+.3f} "
+                f"| {e_ratio:.2f} | {ev_ratio:.2f} |")
+        md += "\n".join(plines) + "\n"
+    return md
+
+
+def _pair_trainings(cell_rows):
+    """Match cells identical up to ``training``; [(key, conv_row, direct_row)].
+
+    The pairing key is every spec field except ``training`` and the
+    train_snn-only recipe fields (which are inert on convert cells).
+    """
+    inert = {"training", "snn_epochs", "snn_batch", "snn_lr", "surrogate",
+             "sg_beta", "loss_target", "rate_reg", "snn_init_seed"}
+    by_key: dict = {}
+    for row in cell_rows:
+        s = row["spec"]
+        key = tuple(sorted((k, repr(v)) for k, v in s.items()
+                           if k not in inert))
+        by_key.setdefault(key, {})[s.get("training", "convert")] = row
+    pairs = []
+    for variants in by_key.values():
+        if "convert" in variants and "direct" in variants:
+            s = variants["convert"]["spec"]
+            pricing = (("c" if s["compressed"] else "u") + "+"
+                       + ("VMEM" if s["vmem_resident"] else "HBM")
+                       + f"+w{s['weight_bits']}")
+            pairs.append(((s["dataset"], s["backend"], pricing),
+                          variants["convert"], variants["direct"]))
+    return pairs
 
 
 def _parse_shard(s: str) -> tuple[int, int]:
@@ -277,6 +352,9 @@ def main(argv=None) -> int:
                          "0 disables sharding)")
     ap.add_argument("--max-cells", type=int, default=None,
                     help="execute at most N cells this run (kill/resume aid)")
+    ap.add_argument("--direct", action="store_true",
+                    help="add surrogate-gradient-trained cells next to every "
+                         "converted one (converted-vs-direct grid)")
     ap.add_argument("--fresh", action="store_true",
                     help="ignore existing cell checkpoints")
     ap.add_argument("--cell-shard", type=_parse_shard, default=(0, 1),
@@ -297,7 +375,8 @@ def main(argv=None) -> int:
     cells = paper_grid(
         quick=args.quick,
         datasets=args.datasets.split(",") if args.datasets else None,
-        backends=args.backends.split(",") if args.backends else None)
+        backends=args.backends.split(",") if args.backends else None,
+        direct=args.direct)
     print(f"[sweep] {len(cells)} cells "
           f"({'quick' if args.quick else 'full'} grid)")
 

@@ -1,0 +1,166 @@
+"""Direct SNN training with surrogate gradients (ROADMAP item: the scenario
+the paper's conversion pipeline could not reach).
+
+The spiking network is trained *through the engine's own plan*:
+``engine.train_forward`` walks the dense backend's batched program under a
+forward-identical surrogate neuron model (``core/neuron.surrogate_model``),
+so ``jax.grad`` flows through the ``lax.scan`` time loop and the net that
+comes out is exactly the net every inference backend executes — thresholds
+stay at the unit values conversion would normalize to, and the learned
+weights drop into ``collect``/``price``/``serve`` unchanged.
+
+Loss-target menu (the ANTLR-style selection, SNIPPETS.md snippet 3):
+
+- ``count``   — cross-entropy on the time-summed output membrane (the
+                spike-count readout; the default).
+- ``train``   — per-step cross-entropy on the running (cumulative) membrane,
+                averaged over T: the output must be right at *every* step,
+                the target-spike-train analogue for a non-spiking readout.
+- ``latency`` — cross-entropy on an early-weighted membrane sum (weights
+                decay linearly over t): evidence must arrive in the first
+                steps, pushing decisions — and spikes — earlier.
+
+Plus a spike-rate regularizer: ``rate_reg * mean(layer spike rates)``
+(computed from the differentiable float rasters), the knob that trades
+accuracy against event count — the break-even axis of the study grid.
+
+``step_counts["steps"]`` tallies executed optimizer steps the way
+``study.stages.stage_counts`` tallies stage executions; tests pin the
+"second train_snn call runs ZERO training steps" cache guarantee on it.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpoint
+from ..core import engine
+from ..core.cnn_baseline import cross_entropy
+from ..core.snn_model import init_params
+from .optimizer import adamw_init, adamw_update
+
+# the loss-target menu; StudySpec validation and make_snn_train_step both
+# check against it
+VALID_TARGETS = ["count", "train", "latency"]
+
+step_counts: collections.Counter = collections.Counter()
+
+
+def reset_step_counts() -> None:
+    step_counts.clear()
+
+
+def unit_thresholds(net: str, input_hw: int, input_c: int) -> list:
+    """Per-layer V_t = 1.0 — the values a freshly trained net deploys with.
+
+    Same shape contract as ``conversion.convert``'s threshold list (one
+    scalar per spec layer, pool and output slots included), so the direct
+    and converted artifacts are interchangeable downstream.
+    """
+    plan = engine.compile_plan(net, input_hw, input_c)
+    return [jnp.float32(1.0) for _ in range(plan.n_layers)]
+
+
+def target_loss(target: str, step_logits, labels):
+    """One scalar from the (B, T, n_out) per-step output contributions."""
+    if target == "count":
+        return cross_entropy(step_logits.sum(axis=1), labels)
+    if target == "train":
+        cum = jnp.cumsum(step_logits, axis=1)           # running membrane
+        T = step_logits.shape[1]
+        return sum(cross_entropy(cum[:, t], labels) for t in range(T)) / T
+    if target == "latency":
+        T = step_logits.shape[1]
+        w = jnp.arange(T, 0, -1, dtype=step_logits.dtype)  # T, T-1, ..., 1
+        w = w * (T / w.sum())                           # same total mass as count
+        return cross_entropy((step_logits * w[None, :, None]).sum(axis=1),
+                             labels)
+    raise ValueError(
+        f"unknown loss target {target!r}; valid targets: {VALID_TARGETS}")
+
+
+def make_snn_train_step(cfg: engine.SNNConfig, thresholds, *,
+                        target: str = "count", rate_reg: float = 0.0,
+                        surrogate: str = "superspike", beta: float = 10.0,
+                        lr: float = 5e-3):
+    """Build ``(step, loss_fn)`` for one training configuration.
+
+    ``loss_fn(params, images, labels)`` is the traceable loss forward (what
+    the audit walks for batch purity); ``step(params, opt, images, labels)``
+    is the jitted AdamW update returning ``(params, opt, loss)``.
+    """
+    if target not in VALID_TARGETS:
+        raise ValueError(
+            f"unknown loss target {target!r}; valid targets: {VALID_TARGETS}")
+    thresholds = tuple(thresholds)
+
+    def loss_fn(params, images, labels):
+        step_logits, rates = engine.train_forward(
+            params, thresholds, cfg, images, surrogate=surrogate, beta=beta)
+        loss = target_loss(target, step_logits, labels)
+        if rate_reg:
+            loss = loss + rate_reg * rates.mean()
+        return loss
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, images, labels)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    return step, loss_fn
+
+
+def fit_snn(net: str, images, labels, *, T: int = 4, mode: str = "mttfs_cont",
+            input_mode: str = "analog", input_theta: float = 0.1,
+            v_init_frac: float = 0.5, epochs: int = 4, batch: int = 128,
+            lr: float = 5e-3, target: str = "count", rate_reg: float = 0.0,
+            surrogate: str = "superspike", beta: float = 10.0,
+            init_seed: int = 0, ckpt_dir: str | None = None):
+    """Train the SNN directly; returns ``(params, thresholds, final_loss)``.
+
+    Mirrors ``stages.fit_cnn``'s epoch/permutation/batch structure (numpy
+    epoch-seeded shuffles, jitted steps) so same-seed runs are bit-identical
+    on one host — the determinism tests rely on it.
+
+    ``ckpt_dir`` turns on per-epoch fault tolerance through
+    ``repro.checkpoint.checkpoint``: after each epoch the (params, opt)
+    tree is committed atomically with the epoch as the step number, and a
+    restart restores the newest intact checkpoint and continues from the
+    next epoch — bit-identical to the uninterrupted run, because the only
+    loop state is (params, opt, epoch) and the shuffles are epoch-seeded.
+    """
+    images = np.asarray(images)
+    labels = np.asarray(labels)
+    hw, c = images.shape[1], images.shape[-1]
+    params = init_params(jax.random.PRNGKey(init_seed), net, hw, c)
+    thresholds = unit_thresholds(net, hw, c)
+    cfg = engine.SNNConfig(
+        spec=net, input_hw=hw, input_c=c, T=T, mode=mode,
+        input_mode=input_mode, input_theta=input_theta,
+        v_init_frac=v_init_frac)
+    step, _ = make_snn_train_step(
+        cfg, thresholds, target=target, rate_reg=rate_reg,
+        surrogate=surrogate, beta=beta, lr=lr)
+    opt = adamw_init(params)
+
+    start_epoch = 0
+    if ckpt_dir is not None and checkpoint.latest_step(ckpt_dir) is not None:
+        (params, opt), start_epoch = checkpoint.restore(
+            ckpt_dir, (params, opt))
+
+    loss = None
+    for epoch in range(start_epoch, epochs):
+        perm = np.random.default_rng(epoch).permutation(len(images))
+        for i in range(0, len(images), batch):
+            idx = perm[i : i + batch]
+            params, opt, loss = step(
+                params, opt, jnp.asarray(images[idx]),
+                jnp.asarray(labels[idx]))
+            step_counts["steps"] += 1
+        if ckpt_dir is not None:
+            checkpoint.save(ckpt_dir, epoch + 1, (params, opt))
+    return params, thresholds, loss

@@ -378,3 +378,35 @@ def test_traced_backend_probes_clean():
     for name, closed in probe.trace_quant_kernels().items():
         assert jaxpr_rules.check_quant(name, closed, QuantContract(),
                                        ROOT) == [], name
+
+
+def test_train_step_trace_loss_purity_and_full_step_dtypes():
+    """The direct-training traces obey their declared contract.
+
+    The loss forward owns exactly ``train_loss_reductions`` batch-axis
+    eliminations (batch-mean CE + batch-mean rate regularizer); declaring
+    one fewer must fire batch-purity, which proves the rule actually walks
+    the surrogate dynamics. The full grad step — whose backward contracts
+    the batch into every weight gradient, hence no purity count — still
+    passes dtype and host-sync discipline."""
+    from repro.core import engine
+
+    cfg = probe.probe_config()
+    tainted = probe.batch_tainted_sizes(cfg)
+    declared = engine.BACKEND_CONTRACTS["dense"].train_loss_reductions
+    assert declared == 2
+
+    traces = probe.trace_train_step(cfg)
+    loss = traces["training.loss_fn[count+rate_reg]"]
+    assert jaxpr_rules.check_batch_purity(
+        "training.loss_fn", loss, tainted, declared, ROOT) == []
+    under = jaxpr_rules.check_batch_purity(
+        "training.loss_fn", loss, tainted, declared - 1, ROOT)
+    assert under and all(f.rule == "batch-purity" for f in under)
+    assert all(f.severity == "error" for f in under)
+
+    step = traces["training.train_step"]
+    for closed, name in ((loss, "loss"), (step, "step")):
+        assert jaxpr_rules.check_dtypes(f"training.{name}", closed, ROOT) == []
+        assert jaxpr_rules.check_host_sync(f"training.{name}", closed,
+                                           ROOT) == []

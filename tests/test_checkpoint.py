@@ -99,3 +99,27 @@ def test_elastic_reshard_on_load(tmp_path):
     placed = ck.reshard_on_load(restored, shardings)
     np.testing.assert_array_equal(np.asarray(placed["a"]),
                                   np.asarray(tree["a"]))
+
+
+def test_snn_params_with_empty_pool_slots_roundtrip(tmp_path):
+    """The engine's parameter pytree (list of per-layer dicts where pool
+    layers are EMPTY dicts) round-trips bit-exactly — the tree fit_snn
+    checkpoints between direct-training epochs, alongside its AdamW state."""
+    from repro.core.snn_model import init_params
+    from repro.training.optimizer import adamw_init
+
+    params = init_params(jax.random.PRNGKey(0), "4C3-P2-6", 8, 1)
+    assert params[1] == {}  # the pool slot really is an empty dict
+    state = (params, adamw_init(params))
+    ck.save(str(tmp_path), 2, state)
+    restored, step = ck.restore(str(tmp_path), state)
+    assert step == 2
+    r_params, r_opt = restored
+    assert r_params[1] == {}  # empty slot survives the flatten/unflatten
+    for orig, back in zip(params, r_params):
+        assert orig.keys() == back.keys()
+        for k in orig:
+            np.testing.assert_array_equal(np.asarray(orig[k]),
+                                          np.asarray(back[k]))
+    np.testing.assert_array_equal(np.asarray(state[1].mu[0]["w"]),
+                                  np.asarray(r_opt.mu[0]["w"]))

@@ -176,6 +176,11 @@ def test_collect_memory_tier_is_lru_bounded():
     (dict(T=0), StudySpecError),
     (dict(depth=-4), StudySpecError),
     (dict(n_eval=0), StudySpecError),
+    (dict(training="distill"), StudySpecError),
+    (dict(surrogate="heaviside"), StudySpecError),
+    (dict(loss_target="ttfs"), StudySpecError),
+    (dict(snn_epochs=0), StudySpecError),
+    (dict(snn_batch=-1), StudySpecError),
 ])
 def test_spec_validation_named_errors(changes, err):
     kw = dict(dataset="mnist", net="6C3-P2-8", input_hw=28, input_c=1)

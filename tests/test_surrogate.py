@@ -1,0 +1,243 @@
+"""The surrogate-gradient registry: differentiability, pinned numerically.
+
+Two layers of guarantee:
+
+1. **Forward exactness** — ``neuron.spike_fn`` emits *bit-exactly* the hard
+   Heaviside spike (the straight-through construction
+   ``hard + (soft - stop_gradient(soft))`` adds an exact float zero), so a
+   surrogate model's forward dynamics are the inference dynamics.
+2. **Gradient correctness** — the analytic derivative each surrogate
+   registers matches central finite differences of its primal away from the
+   kinks, ``jax.grad`` through the straight-through spike reproduces that
+   same derivative (it is what actually reaches the weights during
+   training), and the triangle surrogate's gradient is *exactly* zero
+   outside its declared clamp window.
+
+Finite-difference checks run both as fixed grids (always) and as hypothesis
+properties over random (x, beta) via the ``_prop`` shim.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro.core import neuron
+
+BETAS = (1.0, 4.0, 10.0)
+
+
+def _fd_grad(primal, x, beta, h=1e-3):
+    """Central difference of the primal, elementwise."""
+    return (np.asarray(primal(jnp.asarray(x + h), beta))
+            - np.asarray(primal(jnp.asarray(x - h), beta))) / (2 * h)
+
+
+def _kink_points(sg, beta):
+    """x values where the primal is non-smooth (excluded from FD checks)."""
+    if sg.clamp_width is not None:
+        return (0.0, sg.clamp_width / beta, -sg.clamp_width / beta)
+    return (0.0,)
+
+
+def _away_from_kinks(x, sg, beta, margin=0.05):
+    return np.all([np.abs(x - k) > margin for k in _kink_points(sg, beta)],
+                  axis=0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(neuron.SURROGATES) >= {"triangle", "superspike", "sigmoid"}
+    for name in neuron.SURROGATES:
+        sg = neuron.get_surrogate(name)
+        assert sg.name == name
+
+
+def test_unknown_surrogate_lists_registered():
+    with pytest.raises(ValueError, match="superspike"):
+        neuron.get_surrogate("nope")
+
+
+def test_register_surrogate_rejects_duplicate_without_overwrite():
+    sg = neuron.get_surrogate("triangle")
+    with pytest.raises(ValueError, match="already registered"):
+        neuron.register_surrogate("triangle", sg.primal, sg.grad)
+
+
+# ---------------------------------------------------------------------------
+# finite-difference gradient checks (fixed grids, every surrogate x beta)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("beta", BETAS)
+@pytest.mark.parametrize("name", neuron.SURROGATES)
+def test_analytic_grad_matches_central_differences(name, beta):
+    """registered grad == d primal/dx (FD), away from the kinks."""
+    sg = neuron.get_surrogate(name)
+    x = np.linspace(-3.0, 3.0, 401).astype(np.float32)
+    keep = _away_from_kinks(x, sg, beta)
+    x = x[keep]
+    fd = _fd_grad(sg.primal, x, beta)
+    an = np.asarray(sg.grad(jnp.asarray(x), beta))
+    np.testing.assert_allclose(an, fd, atol=2e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("beta", BETAS)
+@pytest.mark.parametrize("name", neuron.SURROGATES)
+def test_jax_grad_of_spike_equals_registered_grad(name, beta):
+    """Autodiff through the straight-through spike IS the registered grad.
+
+    This is the path training actually exercises: ``jax.grad`` of
+    ``spike_fn``'s output must reproduce the analytic surrogate derivative
+    everywhere the primal is smooth (the ``where`` branches in the triangle
+    primal make autodiff exact at the plateaus too).
+    """
+    sg = neuron.get_surrogate(name)
+    spike = neuron.spike_fn(name, beta)
+    x = np.linspace(-3.0, 3.0, 401).astype(np.float32)
+    keep = _away_from_kinks(x, sg, beta, margin=1e-3)
+    x = x[keep]
+    auto = np.asarray(jax.vmap(jax.grad(spike))(jnp.asarray(x)))
+    an = np.asarray(sg.grad(jnp.asarray(x), beta))
+    np.testing.assert_allclose(auto, an, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("beta", BETAS)
+def test_triangle_grad_exactly_zero_outside_clamp(beta):
+    """|x| >= clamp_width/beta: the gradient is an exact float 0.0.
+
+    Not merely small — the triangle primal is constant on the plateaus, so
+    both the analytic grad and autodiff through the spike must return
+    literal zeros there (this is what makes the window a hard sparsity
+    guarantee for gradient traffic, not a soft decay)."""
+    sg = neuron.get_surrogate("triangle")
+    assert sg.clamp_width == 1.0
+    edge = sg.clamp_width / beta
+    x = np.concatenate([
+        np.linspace(-4.0, -edge, 50), np.linspace(edge, 4.0, 50)
+    ]).astype(np.float32)
+    an = np.asarray(sg.grad(jnp.asarray(x), beta))
+    np.testing.assert_array_equal(an, np.zeros_like(an))
+    spike = neuron.spike_fn("triangle", beta)
+    auto = np.asarray(jax.vmap(jax.grad(spike))(jnp.asarray(x)))
+    np.testing.assert_array_equal(auto, np.zeros_like(auto))
+
+
+@pytest.mark.parametrize("name", neuron.SURROGATES)
+def test_spike_forward_is_bit_exact_heaviside(name):
+    """spike(x) == (x > 0) exactly — including huge/tiny/negative-zero x."""
+    spike = neuron.spike_fn(name, 10.0)
+    x = jnp.asarray(np.array(
+        [-1e30, -3.0, -1e-4, -1e-30, -0.0, 0.0, 1e-30, 1e-4, 3.0, 1e30],
+        np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(spike(x)), np.asarray((x > 0).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# finite-difference gradient checks (hypothesis properties)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(x=st.floats(min_value=-2.5, max_value=2.5),
+       beta=st.floats(min_value=0.5, max_value=20.0))
+def test_prop_superspike_grad_matches_fd(x, beta):
+    sg = neuron.get_surrogate("superspike")
+    if not _away_from_kinks(np.float32(x), sg, beta):
+        return
+    fd = _fd_grad(sg.primal, np.float32(x), beta, h=1e-3)
+    an = float(sg.grad(jnp.float32(x), beta))
+    assert abs(an - fd) <= 2e-2 + 5e-2 * abs(fd)
+
+
+@settings(deadline=None)
+@given(x=st.floats(min_value=-2.5, max_value=2.5),
+       beta=st.floats(min_value=0.5, max_value=8.0))
+def test_prop_triangle_grad_matches_fd_or_is_zero(x, beta):
+    sg = neuron.get_surrogate("triangle")
+    xf = np.float32(x)
+    if not _away_from_kinks(xf, sg, beta):
+        return
+    an = float(sg.grad(jnp.float32(xf), beta))
+    if abs(beta * xf) >= 1.0:
+        assert an == 0.0
+    else:
+        fd = _fd_grad(sg.primal, xf, beta, h=1e-3)
+        assert abs(an - fd) <= 2e-2 + 5e-2 * abs(fd)
+
+
+# ---------------------------------------------------------------------------
+# surrogate neuron models
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", neuron.MODES)
+def test_surrogate_model_forward_matches_hard_fire(mode):
+    """One fire step: surrogate model == hard model, bit-exact, all modes."""
+    hard = neuron.get_neuron_model(mode)
+    soft = neuron.surrogate_model(mode, "superspike", 10.0)
+    assert soft.straight_through and not hard.straight_through
+    assert soft.pool_latch_once == hard.pool_latch_once
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(0.0, 1.0, (5, 5)).astype(np.float32))
+    latch = jnp.asarray(rng.random((5, 5)) > 0.7)
+    vh, sh, lh = hard.fire(v, latch, jnp.float32(0.5))
+    vs, ss, ls = soft.fire(v, latch, jnp.float32(0.5))
+    np.testing.assert_array_equal(np.asarray(vh), np.asarray(vs))
+    np.testing.assert_array_equal(np.asarray(sh).astype(np.float32),
+                                  np.asarray(ss))
+    np.testing.assert_array_equal(np.asarray(lh), np.asarray(ls))
+
+
+def test_surrogate_model_unknown_mode_and_surrogate():
+    with pytest.raises(ValueError):
+        neuron.surrogate_model("no-such-mode")
+    with pytest.raises(ValueError):
+        neuron.surrogate_model("if_reset", "no-such-surrogate")
+
+
+def test_train_forward_sums_to_inference_logits(make_snn_config):
+    """sum over T of the differentiable per-step output == dense logits.
+
+    The training walk must *be* the inference network: same spikes, same
+    output accumulation (only the summation order of the bias differs, hence
+    allclose rather than array_equal)."""
+    from repro.core import engine
+    from repro.core.snn_model import init_params
+
+    spec = "4C3-P2-6"
+    params = init_params(jax.random.PRNGKey(2), spec, 8, 1)
+    th = [jnp.float32(0.7)] * 3
+    cfg = make_snn_config(spec, 8, T=4, mode="mttfs")
+    imgs = jnp.asarray(
+        np.random.default_rng(4).random((3, 8, 8, 1)), np.float32)
+    step_out, rates = engine.train_forward(params, tuple(th), cfg, imgs)
+    logits, _ = engine.infer_batch(params, th, cfg, imgs, backend="dense")
+    assert step_out.shape == (3, cfg.T, 6)
+    np.testing.assert_allclose(np.asarray(step_out.sum(axis=1)),
+                               np.asarray(logits), atol=1e-4, rtol=1e-4)
+    assert np.all(np.asarray(rates) >= 0) and np.all(np.asarray(rates) <= 1)
+
+
+# ---------------------------------------------------------------------------
+# loss targets
+# ---------------------------------------------------------------------------
+
+def test_target_loss_all_targets_finite_and_distinct():
+    from repro.training.surrogate import VALID_TARGETS, target_loss
+
+    rng = np.random.default_rng(0)
+    step_logits = jnp.asarray(rng.normal(0, 1, (4, 3, 6)).astype(np.float32))
+    labels = jnp.asarray([0, 1, 2, 3])
+    losses = {t: float(target_loss(t, step_logits, labels))
+              for t in VALID_TARGETS}
+    assert all(np.isfinite(v) for v in losses.values())
+    assert len(set(losses.values())) == len(losses)  # targets really differ
+
+
+def test_target_loss_unknown_target():
+    from repro.training.surrogate import target_loss
+
+    with pytest.raises(ValueError, match="latency"):
+        target_loss("nope", jnp.zeros((2, 3, 4)), jnp.zeros((2,), jnp.int32))

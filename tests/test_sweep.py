@@ -170,3 +170,62 @@ def test_cli_main_smoke(dirs, capsys):
     assert main(["--quick", "--datasets", "mnist", "--backends", "dense",
                  "--out", out, "--cache", cache_dir]) == 0
     assert dict(stage_counts) == {}
+
+
+# ---------------------------------------------------------------------------
+# converted vs direct (the --direct grid axis)
+# ---------------------------------------------------------------------------
+
+def test_paper_grid_direct_doubles_along_training_axis():
+    plain = paper_grid(quick=True, datasets=("mnist",))
+    both = paper_grid(quick=True, datasets=("mnist",), direct=True)
+    assert len(both) == 2 * len(plain)
+    assert {s.training for s in plain} == {"convert"}
+    assert {s.training for s in both} == {"convert", "direct"}
+    # each training variant's pricing cells stay adjacent (collect locality)
+    trainings = [s.training for s in both]
+    assert trainings == sorted(trainings, key=trainings.index)
+    # distinct cell checkpoints: training is part of the content identity
+    assert cell_id(both[0]) != cell_id(both[len(plain)])
+
+
+def test_direct_sweep_grid_emits_pairing_section(dirs):
+    """A --direct sweep's markdown gains the converted-vs-direct table, and
+    on the quick MNIST config the direct SNN meets the acceptance bar:
+    accuracy >= the converted SNN at a lower mean event count."""
+    import numpy as np
+
+    out, cache_dir = dirs
+    cells = [BASE, BASE.replace(training="direct", snn_epochs=6,
+                                snn_batch=48, snn_lr=1e-2, rate_reg=3.0)]
+    summary = run_sweep(cells, out_dir=out, cache_dir=cache_dir,
+                        mesh=_mesh(), log=lambda *_: None)
+    assert summary["complete"]
+
+    with open(summary["report_path"]) as f:
+        rows = json.load(f)["cells"]
+    md = markdown_grid(rows)
+    assert "| convert |" in md and "| direct |" in md
+    assert "## Converted vs direct" in md
+    assert "direct/conv events" in md
+
+    by_training = {r["spec"]["training"]: r["report"] for r in rows}
+    conv, direct = by_training["convert"], by_training["direct"]
+    assert direct["snn_acc"] >= conv["snn_acc"]
+    assert direct["snn_events_median"] < conv["snn_events_median"]
+
+    # resumes like any other cell: nothing re-executes
+    reset_stage_counts()
+    run_sweep(cells, out_dir=out, cache_dir=cache_dir, mesh=_mesh(),
+              log=lambda *_: None)
+    assert dict(stage_counts) == {}
+
+
+def test_pairing_skips_unpaired_cells():
+    from repro.study.sweep import _pair_trainings
+
+    row = {"spec": {"dataset": "mnist", "backend": "dense",
+                    "training": "convert", "compressed": True,
+                    "vmem_resident": True, "weight_bits": 8},
+           "report": {}}
+    assert _pair_trainings([row]) == []
