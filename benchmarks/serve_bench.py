@@ -57,6 +57,15 @@ def serve_bench():
              f"p50_ms={r.latency_p50_s * 1e3:.1f};"
              f"p99_ms={r.latency_p99_s * 1e3:.1f};"
              f"buckets={hist}")
+    # tail latency as first-class gateable rows: us_per_call carries the
+    # percentile itself (µs), so check_bench_regression.py's ratio gate
+    # bounds tail-latency growth once these rows join the baseline
+    for pname, val in (("p50", bucketed.latency_p50_s),
+                       ("p95", bucketed.latency_p95_s),
+                       ("p99", bucketed.latency_p99_s)):
+        emit(f"serve/closed_latency_{pname}", val * 1e6,
+             f"requests={n};backend={spec.backend};discipline=closed;"
+             f"estimator=obs.percentiles")
     emit("serve/bucketing_speedup", 0.0,
          f"throughput_x={bucketed.throughput_rps / b1.throughput_rps:.2f};"
          f"requests={n};buckets={'/'.join(map(str, buckets))}")
@@ -79,6 +88,12 @@ def serve_bench():
          f"throughput_rps={opened.throughput_rps:.1f};"
          f"p50_ms={opened.latency_p50_s * 1e3:.1f};"
          f"p99_ms={opened.latency_p99_s * 1e3:.1f}")
+    for pname, val in (("p50", opened.latency_p50_s),
+                       ("p95", opened.latency_p95_s),
+                       ("p99", opened.latency_p99_s)):
+        emit(f"serve/open_latency_{pname}", val * 1e6,
+             f"requests={n};backend={spec.backend};discipline=open;"
+             f"rate_rps={rate:.0f};estimator=obs.percentiles")
 
     if not (parity["elementwise_bitexact"] and parity["sum_bitexact"]):
         raise AssertionError(

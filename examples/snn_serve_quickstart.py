@@ -17,6 +17,7 @@ demonstrates the serving path, not the accuracy claims (those live in
 import argparse
 import time
 
+from repro import obs
 from repro.data.synthetic import DATASETS
 from repro.serve import BucketPolicy, ModelRegistry, ServeRuntime
 from repro.study import StudySpec
@@ -28,7 +29,15 @@ def main():
                     help="CI smoke: short training, fewer requests")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--backend", default="queue_pallas")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record an obs trace of the run and write it to "
+                         "PATH as JSONL; render it with `python -m "
+                         "repro.obs summarize PATH` "
+                         "(see docs/OBSERVABILITY.md)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     spec = StudySpec(
         dataset="mnist",
@@ -69,6 +78,11 @@ def main():
     print(f"\nserved {n} requests: accuracy {correct / n:.2f}, "
           f"total energy {total_j * 1e6:.1f} uJ")
     print(f"runtime counters: {runtime.stats_summary()}")
+
+    if args.trace:
+        obs.save_jsonl(args.trace)
+        print(f"trace written to {args.trace} — render with: "
+              f"python -m repro.obs summarize {args.trace}")
 
 
 if __name__ == "__main__":

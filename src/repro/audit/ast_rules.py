@@ -27,6 +27,22 @@ Rules (all anchored at the offending ``file:line``):
                        sync (the sparse occupancy gate, serve's
                        block-until-ready), and the audit fails on any new
                        unmarked one.
+- ``obs-in-jit``       ``obs.span/event/counter/gauge/observe`` — or a
+                       direct wall-clock read (``time.perf_counter`` /
+                       ``time.monotonic``) — inside a jit-decorated
+                       function. Instrumentation is host-side by contract:
+                       inside a traced path an obs call fires once at trace
+                       time (recording a lie) and a clock read
+                       constant-folds. No marker escape — there is no
+                       correct use; record around the jitted call.
+- ``clock-marker``     direct wall-clock reads in library code without the
+                       ``# audit: allow[host-sync]`` marker. Deliberate
+                       timing sites (the load generator, the sweep cell
+                       timer) annotate themselves; everything else must
+                       route through an injectable clock (``Tracer.clock``,
+                       ``ServeRuntime.clock``) so tests stay deterministic.
+                       Bare references (``clock=time.perf_counter`` default
+                       args) are the sanctioned indirection and never flag.
 """
 from __future__ import annotations
 
@@ -54,6 +70,13 @@ QUEUE_ENTRY_POINTS = frozenset({
 })
 _BANNED_IMPORT_ROOTS = frozenset({"tests", "benchmarks"})
 _BANNED_IMPORT_NAMES = frozenset({"_seed_reference", "_legacy_study"})
+# the public instrumentation surface of repro.obs (obs-in-jit rule)
+_OBS_API = frozenset({"span", "event", "counter", "gauge", "observe"})
+# direct monotonic-clock reads (obs-in-jit inside traces, clock-marker
+# elsewhere); ``time.time`` is excluded — wall-of-day reads are logging,
+# not measurement, and never constant-fold anything that matters
+_CLOCK_CALLS = frozenset({"perf_counter", "perf_counter_ns",
+                          "monotonic", "monotonic_ns"})
 
 
 def iter_source_files(src_root: str):
@@ -201,6 +224,36 @@ def check_file(path: str, root: str) -> list[Finding]:
                 f"host-synchronizing call {sync!r} without an "
                 f"'{ALLOW_MARKER} <reason>' marker — deliberate host "
                 "pulls must be annotated where they happen"))
+
+        # --- obs-in-jit / clock-marker ---------------------------------
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)):
+            owner, attr = node.func.value.id, node.func.attr
+            if owner == "obs" and attr in _OBS_API and in_jit(lineno):
+                out.append(Finding(
+                    "obs-in-jit", "error", rel, lineno,
+                    f"obs.{attr} inside a jit-decorated function — "
+                    "instrumentation is host-side by contract: in a "
+                    "traced path this fires once at trace time (a lie) "
+                    "and never per execution; record around the jitted "
+                    "call instead"))
+            elif owner == "time" and attr in _CLOCK_CALLS:
+                if in_jit(lineno):
+                    out.append(Finding(
+                        "obs-in-jit", "error", rel, lineno,
+                        f"time.{attr}() inside a jit-decorated function "
+                        "constant-folds to the trace-time instant — the "
+                        "'measurement' would be a compile-time constant; "
+                        "time around the jitted call instead"))
+                elif not _has_marker(lines, lineno):
+                    out.append(Finding(
+                        "clock-marker", "error", rel, lineno,
+                        f"direct clock read time.{attr}() without an "
+                        f"'{ALLOW_MARKER} <reason>' marker — deliberate "
+                        "timing sites annotate themselves; everything "
+                        "else takes an injectable clock so tests stay "
+                        "deterministic"))
 
     return out
 

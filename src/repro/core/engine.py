@@ -48,6 +48,7 @@ from typing import NamedTuple, Protocol
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..audit.contracts import BackendContract, QuantContract
 from . import encoding
 from .aeq import (AEQ, aeq_from_raster, phase_occupancy, segment_keep,
@@ -785,6 +786,7 @@ def register_backend(name: str, backend: Backend, *, overwrite: bool = False):
         raise ValueError(f"backend {name!r} already registered")
     _BACKENDS[name] = backend
     _runner.cache_clear()  # a new backend may shadow a cached name
+    _jit_seen.clear()      # ...so first-call tracking must restart too
     return backend
 
 
@@ -1073,10 +1075,34 @@ def _runner(cfg: SNNConfig, backend_name: str, batched: bool):
     return jax.jit(run)
 
 
+# Cold-start observability: jax's jit cache compiles lazily on the first
+# call per input *shape*, so the engine tracks first-calls per
+# (config, backend, B) itself — ``engine.jit_compile`` spans time that
+# first call (trace + XLA compile + dispatch: the cold-start number
+# ROADMAP item 3 needs as its baseline) and the hit/miss counters expose
+# the cache behaviour load tests care about. Host-side bookkeeping only;
+# the traced programs are untouched.
+_jit_seen: set = set()
+
+
+def _first_call(key) -> bool:
+    if key in _jit_seen:
+        return False
+    _jit_seen.add(key)
+    return True
+
+
 def infer(params, thresholds, cfg: SNNConfig, image, *,
           backend: str = "dense"):
     """Run one (H, W, C) sample; returns ``(logits, SNNStats)``."""
-    return _runner(cfg, backend, False)(params, tuple(thresholds), image)
+    run = _runner(cfg, backend, False)
+    if _first_call((cfg, backend, None)):
+        obs.counter("engine.jit_miss")
+        with obs.span("engine.jit_compile", backend=backend, B=0,
+                      spec=cfg.spec):
+            return run(params, tuple(thresholds), image)
+    obs.counter("engine.jit_hit")
+    return run(params, tuple(thresholds), image)
 
 
 # Batch dispatch override, installed (and restored) by
@@ -1112,7 +1138,15 @@ def infer_batch(params, thresholds, cfg: SNNConfig, images, *,
     if _batch_dispatch is not None:
         return _batch_dispatch(params, thresholds, cfg, images,
                                backend=backend)
-    return _runner(cfg, backend, True)(params, tuple(thresholds), images)
+    run = _runner(cfg, backend, True)
+    B = images.shape[0]
+    if _first_call((cfg, backend, B)):
+        obs.counter("engine.jit_miss")
+        with obs.span("engine.jit_compile", backend=backend, B=B,
+                      spec=cfg.spec):
+            return run(params, tuple(thresholds), images)
+    obs.counter("engine.jit_hit")
+    return run(params, tuple(thresholds), images)
 
 
 def batch_runner(cfg: SNNConfig, backend: str = "dense"):
@@ -1195,3 +1229,4 @@ BACKEND_CONTRACTS: dict[str, BackendContract] = {
 _on_registry_change.append(_runner.cache_clear)
 _on_registry_change.append(_sparse_layer_fn.cache_clear)
 _on_registry_change.append(_sparse_analog_fn.cache_clear)
+_on_registry_change.append(_jit_seen.clear)

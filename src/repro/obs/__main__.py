@@ -1,0 +1,60 @@
+"""CLI: ``python -m repro.obs summarize <trace.jsonl> [--limit N]
+[--chrome out.json] [--summary $GITHUB_STEP_SUMMARY]``.
+
+``summarize`` renders the per-span latency/count table, the serve-request
+waterfall, and the metrics snapshot as markdown; ``--chrome`` additionally
+re-exports the trace in Chrome-trace format for Perfetto.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from ..audit.gh_summary import emit
+from .export import read_jsonl
+from .summarize import summarize
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_sum = sub.add_parser("summarize",
+                           help="render a JSONL trace as markdown tables")
+    p_sum.add_argument("trace", help="path to a trace.jsonl")
+    p_sum.add_argument("--limit", type=int, default=40,
+                       help="max requests in the waterfall (default 40)")
+    p_sum.add_argument("--chrome", default="",
+                       help="also write a Chrome-trace JSON to this path")
+    p_sum.add_argument("--summary", default="",
+                       help="append the report to this file "
+                            "(pass $GITHUB_STEP_SUMMARY in CI)")
+    args = parser.parse_args(argv)
+
+    if args.cmd == "summarize":
+        report = summarize(args.trace, limit=args.limit)
+        emit(report, args.summary)
+        if args.chrome:
+            trace = read_jsonl(args.trace)
+            events = []
+            for s in trace["spans"]:
+                ev = {"name": s["name"], "ph": "X", "pid": 0,
+                      "tid": s.get("tid", 0), "ts": s["ts"] * 1e6,
+                      "dur": s["dur"] * 1e6}
+                if s.get("attrs"):
+                    ev["args"] = s["attrs"]
+                events.append(ev)
+            for e in trace["events"]:
+                ev = {"name": e["name"], "ph": "i", "s": "t", "pid": 0,
+                      "tid": e.get("tid", 0), "ts": e["ts"] * 1e6}
+                if e.get("attrs"):
+                    ev["args"] = e["attrs"]
+                events.append(ev)
+            with open(args.chrome, "w") as f:
+                json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+            print(f"chrome trace -> {args.chrome}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

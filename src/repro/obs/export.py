@@ -1,0 +1,83 @@
+"""Trace exporters: JSON-lines (the repo-native format) and Chrome-trace.
+
+JSONL schema — one object per line, discriminated by ``type``:
+
+    {"type": "span",  "sid": 3, "parent": 1, "name": "serve.execute",
+     "ts": 0.12, "dur": 0.003, "depth": 2, "tid": 1234, "attrs": {...}}
+    {"type": "event", "name": "serve.plan_evict", "ts": 0.5, "tid": 1234,
+     "attrs": {...}}
+    {"type": "metrics", "counters": {...}, "gauges": {...},
+     "histograms": {...}}
+
+``ts``/``dur`` are seconds from the tracer's (possibly injected) clock.
+The Chrome-trace exporter emits the ``traceEvents`` JSON-object form that
+``chrome://tracing`` and Perfetto both load: complete events (``ph="X"``)
+with microsecond ``ts``/``dur``, instant events as ``ph="i"``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional
+
+from .trace import EventRecord, SpanRecord
+
+
+def write_jsonl(path: str, spans: Iterable[SpanRecord],
+                events: Iterable[EventRecord] = (),
+                metrics_snapshot: Optional[Dict[str, Any]] = None) -> None:
+    with open(path, "w") as f:
+        for s in spans:
+            f.write(json.dumps(s.to_dict()) + "\n")
+        for e in events:
+            f.write(json.dumps(e.to_dict()) + "\n")
+        if metrics_snapshot is not None:
+            f.write(json.dumps({"type": "metrics", **metrics_snapshot}) + "\n")
+
+
+def read_jsonl(path: str) -> Dict[str, Any]:
+    """Parse a trace written by :func:`write_jsonl` back into plain dicts:
+    ``{"spans": [...], "events": [...], "metrics": {...} | None}``."""
+    spans: List[Dict[str, Any]] = []
+    events: List[Dict[str, Any]] = []
+    metrics: Optional[Dict[str, Any]] = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            kind = rec.get("type")
+            if kind == "span":
+                spans.append(rec)
+            elif kind == "event":
+                events.append(rec)
+            elif kind == "metrics":
+                metrics = rec
+    return {"spans": spans, "events": events, "metrics": metrics}
+
+
+def chrome_trace(spans: Iterable[SpanRecord],
+                 events: Iterable[EventRecord] = ()) -> Dict[str, Any]:
+    """The ``{"traceEvents": [...]}`` object form (Perfetto-loadable)."""
+    out: List[Dict[str, Any]] = []
+    for s in spans:
+        ev: Dict[str, Any] = {
+            "name": s.name, "ph": "X", "pid": 0, "tid": s.tid,
+            "ts": s.t0 * 1e6, "dur": s.dur * 1e6,
+        }
+        if s.attrs:
+            ev["args"] = s.attrs
+        out.append(ev)
+    for e in events:
+        ev = {"name": e.name, "ph": "i", "s": "t", "pid": 0, "tid": e.tid,
+              "ts": e.ts * 1e6}
+        if e.attrs:
+            ev["args"] = e.attrs
+        out.append(ev)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, spans: Iterable[SpanRecord],
+                       events: Iterable[EventRecord] = ()) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(spans, events), f)

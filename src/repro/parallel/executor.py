@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import obs
 from ..core import engine
 from ..core.neuron import _on_registry_change
 from ..sharding.resolver import batch_partition_spec
@@ -122,14 +123,21 @@ def infer_batch_sharded(params, thresholds, cfg, images, *,
     B = images.shape[0]
     spec = batch_partition_spec(mesh, images.shape)
     runner = batch_runner_sharded(cfg, backend, mesh)
+    # host-side span around the sharded launch (host callbacks inside the
+    # shard_map program are banned by the audit's host-sync rule): one span
+    # per call with the shard geometry, not one per device
     if spec[0] is None:
         # the resolver's divisibility fallback fired: pad to divisible
         pad = (-B) % n
-        padded = jnp.concatenate(
-            [images, jnp.zeros((pad,) + images.shape[1:], images.dtype)])
-        logits, stats = runner(params, tuple(thresholds), padded)
-        return engine.slice_valid(logits, stats, B)
-    return runner(params, tuple(thresholds), images)
+        with obs.span("parallel.shard_execute", backend=backend, B=B,
+                      devices=n, shard_B=(B + pad) // n, padded=pad):
+            padded = jnp.concatenate(
+                [images, jnp.zeros((pad,) + images.shape[1:], images.dtype)])
+            logits, stats = runner(params, tuple(thresholds), padded)
+            return engine.slice_valid(logits, stats, B)
+    with obs.span("parallel.shard_execute", backend=backend, B=B,
+                  devices=n, shard_B=B // n, padded=0):
+        return runner(params, tuple(thresholds), images)
 
 
 @contextlib.contextmanager

@@ -53,8 +53,24 @@ class InferResponse:
     batch_valid: int             # how many real requests shared that bucket
     queue_wait_s: float          # admission -> batch launch
     service_s: float             # the bucket's execute wall time
+    batch_form_s: float = 0.0    # model pick + take + pad, up to launch
+    price_s: float = 0.0         # batch pricing + response assembly
+    pad_fraction: float = 0.0    # padded slots / bucket for this batch
+    step_total_s: float = 0.0    # the whole step() wall time (telescoped)
 
     @property
     def latency_s(self) -> float:
         """End-to-end serving latency: queue wait + batch service."""
         return self.queue_wait_s + self.service_s
+
+    @property
+    def breakdown(self) -> dict:
+        """The per-request time breakdown, in waterfall order. The three
+        step parts telescope: ``batch_form_s + service_s + price_s ==
+        step_total_s`` up to float rounding (pinned by tests)."""
+        return {
+            "queue_wait_s": self.queue_wait_s,
+            "batch_form_s": self.batch_form_s,
+            "execute_s": self.service_s,
+            "price_s": self.price_s,
+        }

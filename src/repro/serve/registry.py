@@ -21,6 +21,7 @@ import collections
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..audit.contracts import BackendContract
 from ..core import engine
 from .api import ServeError
@@ -116,20 +117,27 @@ class ModelHandle:
         """
         if bucket in self._plans:
             self._plans.move_to_end(bucket)
+            obs.counter("serve.plan_hit")
             return self._plans[bucket]
-        if self._bucket_sharded(bucket):
-            from .. import parallel
+        obs.counter("serve.plan_compile")
+        with obs.span("serve.aot_compile", model=self.name,
+                      backend=self.backend, bucket=bucket,
+                      sharded=self._bucket_sharded(bucket)):
+            if self._bucket_sharded(bucket):
+                from .. import parallel
 
-            runner = parallel.batch_runner_sharded(self.cfg, self.backend,
-                                                   self.mesh)
-        else:
-            runner = engine.batch_runner(self.cfg, self.backend)
-        plan = runner.lower(self.params, self.thresholds,
-                            self._image_struct(bucket)).compile()
+                runner = parallel.batch_runner_sharded(self.cfg, self.backend,
+                                                       self.mesh)
+            else:
+                runner = engine.batch_runner(self.cfg, self.backend)
+            plan = runner.lower(self.params, self.thresholds,
+                                self._image_struct(bucket)).compile()
         self.compile_count += 1
         self._plans[bucket] = plan
         while len(self._plans) > self.plan_cache_size:
-            self._plans.popitem(last=False)
+            evicted, _ = self._plans.popitem(last=False)
+            obs.event("serve.plan_evict", model=self.name, bucket=evicted)
+            obs.counter("serve.plan_evictions")
         return plan
 
     def cached_buckets(self) -> tuple:
@@ -215,7 +223,9 @@ class ModelRegistry:
         self._models.pop(name, None)
         self._models[name] = handle
         while len(self._models) > self.capacity:
-            self._models.popitem(last=False)
+            evicted, _ = self._models.popitem(last=False)
+            obs.event("serve.model_evict", model=evicted)
+            obs.counter("serve.model_evictions")
         return handle
 
     def register_study(self, name: str, spec, *, cache=None,

@@ -27,6 +27,7 @@ import time
 
 import numpy as np
 
+from .. import obs
 from ..study.artifacts import StatsRecord
 from ..study.stages import price_record
 from .api import InferRequest, InferResponse, ServeError
@@ -142,6 +143,7 @@ class ServeRuntime:
         """
         if not self.queue:
             return []
+        t_step0 = self.clock()
         model = self._next_model()
         try:
             handle = self.registry.get(model)
@@ -168,16 +170,31 @@ class ServeRuntime:
             taken = taken[:bucket]
         padded = self.policy.pad(np.stack([r.image for r in taken]), bucket)
 
-        t0 = self.clock()
-        launch = t0 if now is None else now
-        logits, stats = handle.run_bucket(padded, len(taken))
-        service_s = self.clock() - t0
+        # three telescoping clock reads bound the step's phases exactly:
+        # [t_step0, t_exec0) batch-form, [t_exec0, t_exec1) execute,
+        # [t_exec1, t_done) price + response assembly. Their sum IS the
+        # step total, so the per-request breakdown accounts for the whole
+        # measured latency (pinned by tests/test_obs.py).
+        t_exec0 = self.clock()
+        launch = t_exec0 if now is None else now
+        with obs.span("serve.execute", model=model, bucket=bucket,
+                      valid=len(taken)):
+            logits, stats = handle.run_bucket(padded, len(taken))
+        t_exec1 = self.clock()
+        service_s = t_exec1 - t_exec0
+        batch_form_s = t_exec0 - t_step0
+        pad_fraction = (bucket - len(taken)) / bucket
 
         self._pending[model] -= len(taken)
         self.n_batches += 1
         self.n_served += len(taken)
         self.n_padded_slots += bucket - len(taken)
         self.bucket_histogram[bucket] += 1
+        if obs.enabled():
+            obs.observe("serve.bucket_occupancy", len(taken) / bucket)
+            obs.observe("serve.pad_fraction", pad_fraction)
+            obs.counter("serve.batches")
+            obs.counter("serve.requests", len(taken))
 
         logits = np.asarray(logits)
         ev = np.asarray(stats.events_in)
@@ -192,9 +209,10 @@ class ServeRuntime:
         # otherwise dominate small-model serving cost)
         batch_record = StatsRecord(events_in=ev, spikes_out=sp, add_ops=ao,
                                    queue_words=qw, overflow=ovf)
-        e = price_record(batch_record, input_hw=handle.cfg.input_hw,
-                         compressed=handle.cfg.compressed,
-                         vmem_resident=handle.vmem_resident)
+        with obs.span("serve.price", model=model, valid=len(taken)):
+            e = price_record(batch_record, input_hw=handle.cfg.input_hw,
+                             compressed=handle.cfg.compressed,
+                             vmem_resident=handle.vmem_resident)
         energy_j = np.asarray(e.total_j)
         model_latency_s = np.asarray(e.latency_s)
 
@@ -211,7 +229,29 @@ class ServeRuntime:
                 model_latency_s=float(model_latency_s[i]),
                 bucket=bucket, batch_valid=len(taken),
                 queue_wait_s=max(0.0, launch - req.arrival_s),
-                service_s=service_s))
+                service_s=service_s, batch_form_s=batch_form_s,
+                pad_fraction=pad_fraction))
+        # the price window closes only after responses exist, so these two
+        # fields are assigned post-construction (the dataclass is mutable)
+        t_done = self.clock()
+        price_s = t_done - t_exec1
+        step_total_s = t_done - t_step0
+        for resp in responses:
+            resp.price_s = price_s
+            resp.step_total_s = step_total_s
+        if obs.enabled():
+            for resp in responses:
+                # waterfall segments must not overlap: queue_wait_s
+                # (admission -> launch) already contains the batch-form
+                # window, so the event's queue segment stops at t_step0
+                wf_queue = max(0.0, resp.queue_wait_s - batch_form_s)
+                obs.event(
+                    "serve.request", rid=resp.rid, model=resp.model,
+                    bucket=resp.bucket, pad_fraction=resp.pad_fraction,
+                    queue_wait_s=wf_queue, batch_form_s=batch_form_s,
+                    execute_s=service_s, price_s=price_s,
+                    latency_s=wf_queue + batch_form_s + service_s + price_s)
+                obs.observe("serve.request_latency_s", resp.latency_s)
         return responses
 
     def run_until_drained(self, max_steps: int = 100_000):

@@ -26,6 +26,8 @@ from typing import Callable
 
 import numpy as np
 
+from .. import obs
+
 
 def _feed(h, obj) -> None:
     """Stable recursive content walk (arrays by dtype/shape/bytes)."""
@@ -112,6 +114,7 @@ class StudyCache:
         if mem_key in self._mem:
             art = self._mem.pop(mem_key)   # re-insert: LRU recency
             self._mem[mem_key] = art
+            obs.counter(f"study.cache.{kind}.mem_hit")
             return art
 
         use_disk = self.dir is not None and kind in self.disk_kinds
@@ -126,9 +129,12 @@ class StudyCache:
                     pass  # truncated/corrupt/stale-format file: rebuild
                 else:
                     self._remember(kind, key, art)
+                    obs.counter(f"study.cache.{kind}.disk_hit")
                     return art
 
-        art = build()
+        obs.counter(f"study.cache.{kind}.miss")
+        with obs.span(f"study.{kind}", key=key, tag=tag):
+            art = build()
         self._remember(kind, key, art)
         if use_disk:
             os.makedirs(self.dir, exist_ok=True)

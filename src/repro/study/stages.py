@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import conversion, encoding, engine
 from ..core.cnn_baseline import cnn_costs, cnn_forward, make_train_step
 from ..core.energy import STATIC_POWER_W, cnn_energy, reprice
@@ -330,6 +331,15 @@ def price(spec: StudySpec, collected: CollectArtifact,
     static) CNN side is re-evaluated, because ``weight_bits`` changes its
     quantized forward pass.
     """
+    # NOT in stage_counts: that counter tallies cache-missable stage
+    # executions and tests pin its exact contents; price has no cache tier
+    obs.counter("study.stage.price")
+    with obs.span("study.price", dataset=spec.dataset, backend=spec.backend):
+        return _price_impl(spec, collected, trained, labels)
+
+
+def _price_impl(spec: StudySpec, collected: CollectArtifact,
+                trained: TrainArtifact, labels) -> Report:
     images = jnp.asarray(collected.images)
     labels = jnp.asarray(labels)
 

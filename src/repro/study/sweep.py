@@ -49,6 +49,7 @@ import tempfile
 import time
 import types
 
+from .. import obs
 from .cache import StudyCache, content_key
 from .spec import StudySpec
 
@@ -202,10 +203,14 @@ def run_sweep(cells, *, out_dir: str, cache: StudyCache | None = None,
             log(f"[sweep] stopping after {max_cells} executed cell(s) "
                 f"(--max-cells); resume to continue")
             break
+        # audit: allow[host-sync] the per-cell elapsed_s persisted into
+        # sweep_report.json — a deliberate measurement boundary
         t0 = time.perf_counter()
-        with parallel.use_mesh(mesh):
-            report = stages.run(spec, cache=cache)
-        elapsed = time.perf_counter() - t0
+        with obs.span("sweep.cell", index=idx, dataset=spec.dataset,
+                      backend=spec.backend, pricing=spec.pricing_label()):
+            with parallel.use_mesh(mesh):
+                report = stages.run(spec, cache=cache)
+        elapsed = time.perf_counter() - t0  # audit: allow[host-sync]
         _atomic_write_json(path, _cell_payload(spec, report, elapsed))
         executed.append(idx)
         log(f"[sweep] cell {idx + 1}/{len(cells)} done in {elapsed:.1f}s: "
@@ -228,6 +233,7 @@ def run_sweep(cells, *, out_dir: str, cache: StudyCache | None = None,
         "executed": len(executed),
         "resumed": len(resumed),
         "complete": not missing,
+        "timing": _timing_block(rows),
         "cells": rows,
     }
     if not missing:
@@ -243,6 +249,33 @@ def run_sweep(cells, *, out_dir: str, cache: StudyCache | None = None,
         log(f"[sweep] {len(missing)} cell(s) still missing; consolidated "
             "report deferred (resume, or let the other cell-shards finish)")
     return summary
+
+
+def _timing_block(cell_rows) -> dict:
+    """Per-cell wall-time summary for ``sweep_report.json``.
+
+    Built from the checkpoints' recorded ``elapsed_s`` (so it works whether
+    or not tracing was enabled when each cell actually ran; resumed cells
+    report their *original* execution time). ``by_cell`` maps cell_id ->
+    {label, elapsed_s}; the percentiles use the shared obs estimator.
+    """
+    elapsed = [float(r.get("elapsed_s", 0.0)) for r in cell_rows]
+    ps = obs.percentiles(elapsed)
+    by_cell = {
+        r["cell_id"]: {
+            "label": (f"{r['spec']['dataset']}/{r['spec']['backend']}"
+                      f"/{r['spec'].get('training', 'convert')}"),
+            "elapsed_s": float(r.get("elapsed_s", 0.0)),
+        }
+        for r in cell_rows
+    }
+    return {
+        "total_s": sum(elapsed),
+        "max_s": max(elapsed, default=0.0),
+        "p50_s": ps[50.0] if elapsed else 0.0,
+        "p95_s": ps[95.0] if elapsed else 0.0,
+        "by_cell": by_cell,
+    }
 
 
 def markdown_grid(cell_rows) -> str:

@@ -224,6 +224,89 @@ def test_host_sync_marker_accepts_multiline_comment_block(tmp_path):
     assert found == []
 
 
+def test_obs_in_jit_fires_on_obs_call_inside_jit(tmp_path):
+    found = _lint(tmp_path, """
+        import jax
+        from repro import obs
+
+        obs.counter("host.side")         # outside jit: fine
+
+        @jax.jit
+        def traced(x):
+            obs.counter("lies.once")     # fires at trace time only
+            with obs.span("worse"):      # times the *trace*, not the run
+                return x + 1
+        """)
+    assert _rules(found) == ["obs-in-jit"]
+    assert {f.line for f in found} == {9, 10}
+    assert all(f.severity == "error" for f in found)
+
+
+def test_obs_in_jit_fires_on_clock_read_inside_jit(tmp_path):
+    found = _lint(tmp_path, """
+        import time
+        import jax
+
+        @jax.jit
+        def traced(x):
+            t0 = time.perf_counter()     # constant-folds to trace time
+            return x * t0
+        """)
+    assert _rules(found) == ["obs-in-jit"]
+    assert found[0].line == 7
+    # no marker escape inside jit: the construct is never correct there
+    marked = _lint(tmp_path, """
+        import time
+        import jax
+
+        @jax.jit
+        def traced(x):
+            # audit: allow[host-sync] trying to talk my way past the rule
+            t0 = time.perf_counter()
+            return x * t0
+        """)
+    assert _rules(marked) == ["obs-in-jit"]
+
+
+def test_clock_marker_requires_annotation_outside_jit(tmp_path):
+    found = _lint(tmp_path, """
+        import time
+
+        def measure(fn):
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+        """)
+    assert _rules(found) == ["clock-marker"]
+    assert {f.line for f in found} == {5, 7}
+    marked = _lint(tmp_path, """
+        import time
+
+        def measure(fn):
+            # audit: allow[host-sync] deliberate timing site
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0  # audit: allow[host-sync]
+        """)
+    assert marked == []
+
+
+def test_clock_marker_ignores_injectable_clock_references(tmp_path):
+    """``clock=time.perf_counter`` default args (the sanctioned injectable-
+    clock indirection) and ``self.clock()`` calls never flag."""
+    found = _lint(tmp_path, """
+        import time
+
+        class Timed:
+            def __init__(self, clock=time.perf_counter):
+                self.clock = clock
+
+            def now(self):
+                return self.clock()
+        """)
+    assert found == []
+
+
 def test_audit_package_excluded_from_self_lint(tmp_path):
     pkg = tmp_path / "audit"
     pkg.mkdir()

@@ -1,0 +1,322 @@
+"""repro.obs: tracing + metrics contracts.
+
+What is pinned here, in the order the ISSUE's acceptance criteria state it:
+
+1. **Span mechanics** — nesting (parent/depth links), attributes (at
+   construction and via ``set()``), thread-safe buffering.
+2. **Percentile correctness** — ``Histogram``/``percentiles`` match
+   ``np.percentile`` exactly on random data (same f32 cast, same linear
+   interpolation), so bench rows and trace summaries agree by construction.
+3. **Exporters** — the JSONL round-trips through ``export.read_jsonl`` and
+   the Chrome-trace file is valid JSON in the Trace Event Format shape
+   Perfetto loads (``traceEvents`` list, ``ph``/``ts``/``dur`` fields, µs).
+4. **Zero-cost when disabled** — a pinned per-span overhead bound while
+   disabled, and metric calls are no-ops.
+5. **Injectable clock** — two runs under the same fake clock produce
+   identical records (determinism under test).
+6. **Serving neutrality** — logits and energies of a served batch are
+   bit-exact with tracing on vs off, and the per-request breakdown
+   telescopes to the measured step total.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import engine, snn_model
+from repro.serve import BucketPolicy, ModelRegistry, ServeRuntime
+
+SPEC = "6C3-P2-4C3-8"
+HW, C = 10, 1
+N_LAYERS = len(engine.parse_spec(SPEC))
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts disabled and empty, and restores the real clock."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+    obs._tracer.clock = time.perf_counter
+
+
+class FakeClock:
+    """Deterministic clock: advances ``step`` seconds per read."""
+
+    def __init__(self, step=1.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Span mechanics
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_parent_depth_and_attrs():
+    obs.enable(clock=FakeClock())
+    with obs.span("outer", model="toy") as outer:
+        with obs.span("inner", bucket=4) as inner:
+            inner.set(valid=3)
+    spans = {s.name: s for s in obs.spans()}
+    assert set(spans) == {"outer", "inner"}
+    o, i = spans["outer"], spans["inner"]
+    assert o.parent == -1 and o.depth == 0
+    assert i.parent == o.sid and i.depth == 1
+    assert o.attrs == {"model": "toy"}
+    assert i.attrs == {"bucket": 4, "valid": 3}
+    # inner closes before outer; both have positive fake-clock durations
+    assert i.t1 <= o.t1 and i.dur > 0 and o.dur > 0
+    # the fake clock makes durations exact: enter/exit reads 1s apart,
+    # with inner's two reads inside outer's window
+    assert i.dur == 1.0 and o.dur == 3.0
+
+
+def test_span_records_survive_exceptions():
+    obs.enable(clock=FakeClock())
+    with pytest.raises(RuntimeError):
+        with obs.span("doomed"):
+            raise RuntimeError("boom")
+    (s,) = obs.spans()
+    assert s.name == "doomed" and s.dur == 1.0
+
+
+def test_events_and_metrics_record_when_enabled():
+    obs.enable(clock=FakeClock())
+    obs.event("cache.evict", key="k")
+    obs.counter("hits")
+    obs.counter("hits", 2)
+    obs.gauge("depth", 7)
+    obs.observe("lat", 0.5)
+    (e,) = obs.events()
+    assert e.name == "cache.evict" and e.attrs == {"key": "k"} and e.ts == 1.0
+    snap = obs.metrics_snapshot()
+    assert snap["counters"] == {"hits": 3}
+    assert snap["gauges"] == {"depth": 7.0}
+    assert snap["histograms"]["lat"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Percentiles vs numpy
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_match_numpy_on_random_data():
+    rng = np.random.default_rng(42)
+    samples = rng.exponential(1e-3, 500)
+    hist = obs.Histogram()
+    for s in samples:
+        hist.observe(s)
+    ref = samples.astype(np.float32)
+    summ = hist.summary()
+    assert summ["count"] == 500
+    # same call shape as the implementation (vector of qs): numpy's scalar-q
+    # path rounds through float32 differently at the last ulp
+    expect = np.percentile(ref, [50.0, 95.0, 99.0])
+    for i, key in enumerate(("p50", "p95", "p99")):
+        assert summ[key] == float(expect[i]), key
+        # and the scalar-q reference agrees to float32 resolution
+        assert summ[key] == pytest.approx(
+            float(np.percentile(ref, (50, 95, 99)[i])), rel=1e-6)
+    assert summ["mean"] == float(ref.mean())
+    assert summ["min"] == float(ref.min())
+    assert summ["max"] == float(ref.max())
+
+
+def test_percentiles_helper_handles_empty_and_singleton():
+    empty = obs.percentiles([])
+    assert set(empty) == {50.0, 95.0, 99.0}
+    assert all(np.isnan(v) for v in empty.values())
+    one = obs.percentiles([2.5])
+    assert all(v == 2.5 for v in one.values())
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def _tiny_trace():
+    obs.enable(clock=FakeClock(0.001))
+    with obs.span("a", k=1):
+        with obs.span("b"):
+            pass
+    obs.event("mark", why="test")
+    obs.counter("n")
+    obs.observe("h", 3.0)
+
+
+def test_jsonl_roundtrip(tmp_path):
+    _tiny_trace()
+    p = tmp_path / "trace.jsonl"
+    obs.save_jsonl(str(p))
+    data = obs.export.read_jsonl(str(p))
+    assert [s["name"] for s in data["spans"]] == ["b", "a"]  # finish order
+    assert data["spans"][1]["depth"] == 0
+    assert data["events"][0]["name"] == "mark"
+    assert data["metrics"]["counters"] == {"n": 1}
+    # every line is standalone JSON (the format contract)
+    for line in p.read_text().splitlines():
+        json.loads(line)
+
+
+def test_chrome_trace_is_valid_trace_event_json(tmp_path):
+    _tiny_trace()
+    p = tmp_path / "trace.json"
+    obs.save_chrome_trace(str(p))
+    doc = json.loads(p.read_text())
+    assert isinstance(doc["traceEvents"], list)
+    complete = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert {e["name"] for e in complete} == {"a", "b"}
+    assert instants and instants[0]["name"] == "mark"
+    for e in complete:
+        # Trace Event Format: µs timestamps/durations, pid/tid present
+        assert e["dur"] > 0 and "ts" in e and "pid" in e and "tid" in e
+        assert e.get("args", {}) == ({"k": 1} if e["name"] == "a" else {})
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost when disabled
+# ---------------------------------------------------------------------------
+
+def test_disabled_calls_are_noops_and_share_one_span():
+    assert not obs.enabled()
+    s1 = obs.span("x", a=1)
+    s2 = obs.span("y")
+    assert s1 is s2 is obs.NOOP_SPAN
+    with s1:
+        s1.set(b=2)
+    obs.counter("c")
+    obs.gauge("g", 1)
+    obs.observe("h", 1)
+    obs.event("e")
+    assert obs.spans() == [] and obs.events() == []
+    snap = obs.metrics_snapshot()
+    assert snap["counters"] == {} and snap["histograms"] == {}
+
+
+def test_disabled_span_overhead_below_pinned_bound():
+    """The acceptance bound: disabled instrumentation costs < 5µs/span.
+
+    Measured as min-of-5 over 20k span cycles (min is the noise-robust
+    estimator on a loaded CI box; the real cost is ~100ns).
+    """
+    N = 20_000
+
+    def cycle():
+        t0 = time.perf_counter()
+        for _ in range(N):
+            with obs.span("hot", bucket=16):
+                pass
+            obs.counter("hot.calls")
+        return time.perf_counter() - t0
+
+    best = min(cycle() for _ in range(5))
+    per_span = best / N
+    assert per_span < 5e-6, f"disabled span overhead {per_span * 1e9:.0f}ns"
+
+
+# ---------------------------------------------------------------------------
+# Injectable-clock determinism
+# ---------------------------------------------------------------------------
+
+def test_same_fake_clock_gives_identical_records():
+    def run():
+        obs.reset()
+        obs.enable(clock=FakeClock(0.5))
+        with obs.span("stage", i=0):
+            obs.event("tick")
+            with obs.span("sub"):
+                pass
+        return ([s.to_dict() for s in obs.spans()],
+                [e.to_dict() for e in obs.events()])
+
+    first, second = run(), run()
+    # identical modulo the thread id (same thread here, so fully equal)
+    assert first == second
+    # finish order puts "sub" first: clock reads are enter(0.5),
+    # event(1.0), sub-enter(1.5), sub-exit(2.0), exit(2.5)
+    assert first[0][0]["ts"] == 1.5 and first[0][0]["dur"] == 0.5
+    assert first[0][1]["ts"] == 0.5 and first[0][1]["dur"] == 2.0
+    assert first[1][0]["ts"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Serving: tracing is bit-exactness-neutral and the breakdown telescopes
+# ---------------------------------------------------------------------------
+
+def _serve_batch(imgs, *, traced):
+    obs.reset()
+    if traced:
+        obs.enable()
+    else:
+        obs.disable()
+    params = snn_model.init_params(jax.random.PRNGKey(7), SPEC, HW, C)
+    th = [jnp.asarray(0.5)] * N_LAYERS
+    cfg = snn_model.SNNConfig(spec=SPEC, input_hw=HW, input_c=C, T=3,
+                              depth=16, mode="mttfs_cont")
+    registry = ModelRegistry()
+    registry.register("toy", params, th, cfg, backend="queue_pallas")
+    runtime = ServeRuntime(registry, BucketPolicy((1, 4)))
+    for img in imgs:
+        runtime.submit(img, "toy")
+    return runtime.run_until_drained()
+
+
+def test_tracing_is_bit_exact_neutral_on_serve_responses():
+    imgs = np.random.default_rng(11).random((5, HW, HW, C)).astype(np.float32)
+    off = sorted(_serve_batch(imgs, traced=False), key=lambda r: r.rid)
+    on = sorted(_serve_batch(imgs, traced=True), key=lambda r: r.rid)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a.logits, b.logits)
+        assert a.pred == b.pred
+        assert np.float32(a.energy_j) == np.float32(b.energy_j)
+    # and the traced run actually recorded the serve story
+    names = {s.name for s in obs.spans()}
+    assert {"serve.execute", "serve.price"} <= names
+    assert obs.metrics_snapshot()["counters"]["serve.requests"] == 5
+    assert [e.name for e in obs.events()].count("serve.request") == 5
+
+
+def test_breakdown_telescopes_to_step_total_and_event_latency():
+    imgs = np.random.default_rng(3).random((5, HW, HW, C)).astype(np.float32)
+    responses = _serve_batch(imgs, traced=True)
+    assert len(responses) == 5
+    for r in responses:
+        b = r.breakdown
+        parts = b["batch_form_s"] + b["execute_s"] + b["price_s"]
+        assert r.step_total_s > 0
+        assert parts == pytest.approx(r.step_total_s, rel=1e-9, abs=1e-9)
+        assert 0.0 <= r.pad_fraction < 1.0
+    # the serve.request events' waterfall segments are non-overlapping and
+    # sum exactly to the latency each event reports
+    reqs = [e for e in obs.events() if e.name == "serve.request"]
+    assert len(reqs) == 5
+    for e in reqs:
+        a = e.attrs
+        total = (a["queue_wait_s"] + a["batch_form_s"] + a["execute_s"]
+                 + a["price_s"])
+        assert total == pytest.approx(a["latency_s"], rel=1e-9, abs=1e-9)
+
+
+def test_summarize_renders_breakdown_from_trace(tmp_path):
+    from repro.obs import summarize
+
+    imgs = np.random.default_rng(5).random((3, HW, HW, C)).astype(np.float32)
+    _serve_batch(imgs, traced=True)
+    p = tmp_path / "serve.jsonl"
+    obs.save_jsonl(str(p))
+    report = summarize.summarize(str(p))
+    assert "serve.execute" in report
+    assert "serve.request" in report or "waterfall" in report.lower()
+    # the markdown must carry the per-request breakdown columns
+    for col in ("queue-wait", "batch-form", "execute", "price"):
+        assert col in report, col
