@@ -1,0 +1,220 @@
+"""Cold-start-to-first-response: cold vs warm replica start (ROADMAP 3).
+
+The paper-side motivation: an FPGA accelerator is servable seconds after
+its (pre-built) bitstream loads, while a fresh JAX process re-traces and
+re-compiles everything. This bench measures what the persistence layer
+(``repro.serve.persist`` + the persistent compilation cache) buys:
+
+- **cold**: a worker process facing an empty cache dir — builds the model,
+  AOT-compiles the bucket ladder, serves. This is what every replica paid
+  before PR 10.
+- **warm**: the same worker facing the artifacts the cold run left behind —
+  restores the checkpointed registry (params + ``jax.export`` plan blobs),
+  warms execute-only against the shared compilation cache, serves.
+
+Both rows time the *serve path*: worker-process entry to first response.
+Interpreter + ``import jax`` time (~2.5 s, identical in both phases and
+untouched by this layer) is excluded so the ratio isolates what the
+persistence layer controls; the spawn-measured wall time is recorded in
+each row's derived metrics as ``spawn_to_first_s``.
+
+    # CI shape: two invocations, one shared dir, then the paired-row gate
+    python -m benchmarks.coldstart_bench --quick --phase cold --cache-dir D --json coldstart.json
+    python -m benchmarks.coldstart_bench --quick --phase warm --cache-dir D --json coldstart.json
+    python scripts/check_bench_regression.py coldstart.json coldstart.json --coldstart-min-speedup 5
+
+The cold phase leaves warm artifacts behind (checkpoint + cache entries,
+including one discarded populate run so the restored-plan programs are
+cached, not just the AOT ones), which is exactly the fleet deployment
+story: the first replica ever pays cold, all later replicas pay warm.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+MANIFEST = "registry.json"  # mirror of repro.serve.persist.MANIFEST
+
+
+def _worker(cache_dir: str, *, requests: int, quick: bool,
+            build: bool = False, save: bool = False, trace: str = "",
+            spawn_t0: bool = True) -> dict:
+    """Run one fleet worker subprocess; return its parsed result line."""
+    cmd = [sys.executable, "-m", "repro.serve.fleet", "--worker",
+           "--cache-dir", cache_dir, "--requests", str(requests)]
+    if quick:
+        cmd.append("--quick")
+    if build:
+        cmd.append("--build")
+    if save:
+        cmd.append("--save")
+    if trace:
+        cmd += ["--trace", trace]
+    env = dict(os.environ,
+               REPRO_COMPILE_CACHE=os.path.join(cache_dir, "xla"))
+    if spawn_t0:
+        env["REPRO_FLEET_T0"] = repr(time.time())
+    proc = subprocess.run(cmd, env=env, text=True, capture_output=True)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        raise RuntimeError(f"coldstart worker failed ({proc.returncode})")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _row(result: dict, extra: str = "") -> tuple[float, str]:
+    serve_s = result["serve_path_s"]
+    derived = (f"serve_path_s={serve_s:.3f}"
+               f";spawn_to_first_s={result['first_response_s']:.3f}"
+               f";restore_s={result['restore_s']:.3f}"
+               f";warmup_s={result['warmup_s']:.3f}"
+               f";compiles={result['compile_count']}"
+               f";n={result['n']}")
+    if extra:
+        derived += ";" + extra
+    return serve_s * 1e6, derived
+
+
+def run_cold(cache_dir: str, *, requests: int, quick: bool,
+             trace: str = "") -> tuple[float, str]:
+    """Measure the cold phase, then leave warm artifacts behind."""
+    marker = os.path.join(cache_dir, "registry", MANIFEST)
+    if os.path.exists(marker):
+        raise SystemExit(
+            f"--phase cold needs a fresh dir, but {marker} exists — point "
+            "--cache-dir somewhere empty (cold numbers from a warm dir "
+            "would be a lie)")
+    os.makedirs(cache_dir, exist_ok=True)
+    cold = _worker(cache_dir, requests=requests, quick=quick,
+                   build=True, save=True, trace=trace)
+    # populate pass (discarded): the restored-plan programs differ from the
+    # AOT programs the cold build cached, so one warm run seeds their cache
+    # entries — mirroring a fleet, where replica 2 warms the dir replica 1
+    # built and replica 3+ get pure hits
+    _worker(cache_dir, requests=requests, quick=quick)
+    return _row(cold)
+
+
+def run_warm(cache_dir: str, *, requests: int, quick: bool,
+             trace: str = "", cold_us: float | None = None
+             ) -> tuple[float, str]:
+    marker = os.path.join(cache_dir, "registry", MANIFEST)
+    if not os.path.exists(marker):
+        raise SystemExit(
+            f"--phase warm needs the cold phase's artifacts, but {marker} "
+            "is missing — run --phase cold against this dir first")
+    warm = _worker(cache_dir, requests=requests, quick=quick, trace=trace)
+    if warm["compile_count"]:
+        raise SystemExit(
+            f"warm worker AOT-compiled {warm['compile_count']} plans — the "
+            "checkpoint restore fell back to re-lowering; warm numbers "
+            "would not measure the restore path")
+    extra = ""
+    if cold_us:
+        extra = f"speedup_vs_cold={cold_us / (warm['serve_path_s'] * 1e6):.1f}"
+    return _row(warm, extra)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run integration (one function: both phases, fresh temp dir)
+# ---------------------------------------------------------------------------
+
+def coldstart_cold_vs_warm_bench():
+    """Cold and warm start-to-first-response rows (subprocess-measured)."""
+    from .common import emit
+
+    with tempfile.TemporaryDirectory(prefix="coldstart_") as d:
+        cold_us, cold_derived = run_cold(d, requests=8, quick=True)
+        emit("coldstart/first_response_cold", cold_us, cold_derived)
+        warm_us, warm_derived = run_warm(d, requests=8, quick=True,
+                                         cold_us=cold_us)
+        emit("coldstart/first_response_warm", warm_us, warm_derived)
+
+
+ALL = [coldstart_cold_vs_warm_bench]
+
+
+# ---------------------------------------------------------------------------
+# Standalone CLI (the CI coldstart job: cold and warm as separate invocations)
+# ---------------------------------------------------------------------------
+
+def _merge_snapshot(path: str, rows: dict) -> None:
+    """Merge rows into a bench-v1 snapshot at ``path`` (create or update)."""
+    from .run import _parse_derived
+
+    snap = {"schema": "bench-v1", "failures": 0, "rows": {}}
+    if os.path.exists(path):
+        with open(path) as f:
+            snap = json.load(f)
+    for name, (us, derived) in rows.items():
+        snap.setdefault("rows", {})[name] = {
+            "us_per_call": us, "derived": derived,
+            "metrics": _parse_derived(derived)}
+    snap["generated_unix"] = time.time()
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+    print(f"# wrote {sorted(rows)} into {path}", file=sys.stderr)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="cold vs warm start-to-first-response bench")
+    ap.add_argument("--phase", choices=("cold", "warm", "both"),
+                    default="both")
+    ap.add_argument("--cache-dir", default="",
+                    help="shared artifact dir (required for cold/warm "
+                         "phases; a temp dir when omitted with --phase both)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--json", default="", metavar="OUT",
+                    help="write/merge a bench-v1 snapshot (cold and warm "
+                         "invocations share OUT; the paired-row gate in "
+                         "scripts/check_bench_regression.py reads it)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="obs trace of the measured worker (CI artifact)")
+    args = ap.parse_args(argv)
+
+    if not args.cache_dir and args.phase != "both":
+        ap.error(f"--phase {args.phase} requires --cache-dir (cold and "
+                 "warm must share it)")
+
+    rows = {}
+    tmp = None
+    cache_dir = args.cache_dir
+    if not cache_dir:
+        tmp = tempfile.TemporaryDirectory(prefix="coldstart_")
+        cache_dir = tmp.name
+    try:
+        if args.phase in ("cold", "both"):
+            us, derived = run_cold(cache_dir, requests=args.requests,
+                                   quick=args.quick, trace=args.trace)
+            rows["coldstart/first_response_cold"] = (us, derived)
+            print(f"coldstart/first_response_cold,{us:.1f},{derived}")
+        if args.phase in ("warm", "both"):
+            cold_us = rows.get("coldstart/first_response_cold",
+                               (None, ""))[0]
+            if cold_us is None and args.json and os.path.exists(args.json):
+                with open(args.json) as f:
+                    prior = json.load(f).get("rows", {})
+                cold_us = prior.get("coldstart/first_response_cold",
+                                    {}).get("us_per_call")
+            us, derived = run_warm(cache_dir, requests=args.requests,
+                                   quick=args.quick, trace=args.trace,
+                                   cold_us=cold_us)
+            rows["coldstart/first_response_warm"] = (us, derived)
+            print(f"coldstart/first_response_warm,{us:.1f},{derived}")
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    if args.json:
+        _merge_snapshot(args.json, rows)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -98,12 +98,14 @@ def main() -> None:
     if args.with_dryrun:
         _run_dryrun(args.multi_pod)
 
-    from . import break_even, distributions, kernel_bench, memory_study, \
-        paper_tables, parallel_bench, roofline_report, serve_bench
+    from . import break_even, coldstart_bench, distributions, kernel_bench, \
+        memory_study, paper_tables, parallel_bench, roofline_report, \
+        serve_bench
 
     suites = (paper_tables.ALL + distributions.ALL + memory_study.ALL +
               kernel_bench.ALL + break_even.ALL + serve_bench.ALL +
-              parallel_bench.ALL + roofline_report.ALL)
+              parallel_bench.ALL + coldstart_bench.ALL +
+              roofline_report.ALL)
 
     print("name,us_per_call,derived")
     failures = 0

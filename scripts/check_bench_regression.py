@@ -100,6 +100,42 @@ def check_sparse_sweep(new: dict):
     return errors, warns
 
 
+def check_coldstart_pairs(new: dict, min_speedup: float):
+    """Paired-row gate over ``*_cold`` / ``*_warm`` bench families.
+
+    ``benchmarks/coldstart_bench.py`` writes its cold and warm phases as
+    two rows of one snapshot; this gate checks the *pair*, not each row
+    against a baseline — warm must beat cold by at least ``min_speedup``
+    (the persistence layer's whole claim; the CI coldstart job gates at
+    5×). Checked on the NEW snapshot only; a snapshot without a complete
+    cold/warm pair is a no-op, so the ordinary bench jobs are unaffected.
+    Returns (pairs, errors): pairs as (family, cold_us, warm_us, speedup).
+    """
+    pairs, errors = [], []
+    for name in sorted(new):
+        if not name.endswith("_cold"):
+            continue
+        family = name[: -len("_cold")]
+        warm_name = family + "_warm"
+        if warm_name not in new:
+            continue
+        cold = float(new[name].get("us_per_call", 0.0))
+        warm = float(new[warm_name].get("us_per_call", 0.0))
+        if cold <= 0.0 or warm <= 0.0:
+            errors.append(f"{family}: untimed cold/warm pair "
+                          f"(cold={cold:g}us warm={warm:g}us)")
+            continue
+        speedup = cold / warm
+        pairs.append((family, cold, warm, speedup))
+        if speedup < min_speedup:
+            errors.append(
+                f"{family}: warm start only {speedup:.1f}× faster than cold "
+                f"({warm:.0f}us vs {cold:.0f}us, gate at "
+                f">={min_speedup:g}×) — the persistence layer is not "
+                "paying for itself")
+    return pairs, errors
+
+
 def markdown_report(args, comparisons, regressions, warnings, skipped,
                     only_one) -> str:
     def table(rows):
@@ -151,6 +187,12 @@ def main(argv=None) -> int:
                     help="exit 1 when new/baseline exceeds this (default 5)")
     ap.add_argument("--warn-ratio", type=float, default=2.0,
                     help="report (but pass) above this (default 2)")
+    ap.add_argument("--coldstart-min-speedup", type=float, default=1.0,
+                    help="paired cold/warm gate: warm must be at least this "
+                         "many times faster than cold (default 1 = warm "
+                         "merely must not lose; the CI coldstart job "
+                         "passes 5). Fatal, not advisory — the pair comes "
+                         "from one run on one box, so box noise cancels.")
     ap.add_argument("--summary", default="",
                     help="append the markdown report to this file "
                          "($GITHUB_STEP_SUMMARY in CI)")
@@ -163,16 +205,27 @@ def main(argv=None) -> int:
         load_rows(args.baseline), new_rows,
         args.warn_ratio, args.fail_ratio)
     sweep_errors, sweep_warns = check_sparse_sweep(new_rows)
+    pairs, pair_errors = check_coldstart_pairs(new_rows,
+                                               args.coldstart_min_speedup)
     report = markdown_report(args, comparisons, regressions, warnings,
                              skipped, only_one)
     if sweep_errors or sweep_warns:
         report += "\n### Sparse rate-sweep shape gate\n\n" + "\n".join(
             [f"- ❌ {e}" for e in sweep_errors]
             + [f"- ⚠️ {w}" for w in sweep_warns]) + "\n"
+    if pairs or pair_errors:
+        report += ("\n### Cold/warm paired gate (min "
+                   f"{args.coldstart_min_speedup:g}×)\n\n")
+        report += gh_summary.markdown_table(
+            ["family", "cold µs", "warm µs", "speedup"],
+            [[f, f"{c:.0f}", f"{w:.0f}", f"{s:.1f}×"]
+             for f, c, w, s in pairs]) + "\n"
+        if pair_errors:
+            report += "\n".join(f"- ❌ {e}" for e in pair_errors) + "\n"
     gh_summary.emit(report, args.summary)
 
-    if regressions or sweep_errors:
-        for e in sweep_errors:
+    if regressions or sweep_errors or pair_errors:
+        for e in sweep_errors + pair_errors:
             print(f"FAIL: {e}", file=sys.stderr)
         if regressions:
             print(f"FAIL: {len(regressions)} row(s) regressed more than "

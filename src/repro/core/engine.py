@@ -50,13 +50,19 @@ import jax.numpy as jnp
 
 from .. import obs
 from ..audit.contracts import BackendContract, QuantContract
-from . import encoding
+from . import compile_cache, encoding
 from .aeq import (AEQ, aeq_from_raster, phase_occupancy, segment_keep,
                   span_map)
 from .encoding import AEFormat, encode_ttfs
 from .neuron import (NeuronModel, _on_registry_change, get_neuron_model,
                      surrogate_model)
 from .snn_layers import dense_conv_hwc, event_conv2d, spike_maxpool_hwc
+
+# Persistent compilation cache (docs/SERVING.md "Cold start"): every entry
+# point imports the engine, so this is the chokepoint that makes
+# REPRO_COMPILE_CACHE=<dir> enough to carry jit and AOT compiles across
+# process death. No env var, no behaviour change.
+compile_cache.configure_from_env()
 
 # Engine-internal raster layout: (T, H, W, C) — channels-last end to end, so
 # the dense path runs transpose-free (XLA convs are NHWC-native); the queue
@@ -1072,6 +1078,14 @@ def _runner(cfg: SNNConfig, backend_name: str, batched: bool):
 
         if batched:
             run = jax.vmap(run, in_axes=(None, None, 0))
+    # Stable, backend-qualified program name: the persistent compilation
+    # cache (compile_cache.py) keys on the serialized HLO, whose module
+    # name comes from here — a deterministic name keeps the key identical
+    # across processes (no lambda/line-number noise) and makes cache
+    # entries and profiles attributable to their backend.
+    suffix = "_batch" if batched else ""
+    run.__name__ = f"run_{backend_name}{suffix}"
+    run.__qualname__ = run.__name__
     return jax.jit(run)
 
 

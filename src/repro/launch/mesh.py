@@ -21,12 +21,3 @@ def make_production_mesh(*, multi_pod: bool = False, dp: int = 16, tp: int = 16)
 def make_host_mesh():
     """Degenerate 1x1 mesh over the local device — smoke tests / examples."""
     return jax.make_mesh((1, 1), ("data", "model"))
-
-
-def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
-    """Best mesh for a *surviving* device count (elastic restart after node
-    loss): keeps the model axis if possible, shrinks data parallelism."""
-    while model_parallel > 1 and n_devices % model_parallel != 0:
-        model_parallel //= 2
-    return jax.make_mesh(
-        (n_devices // model_parallel, model_parallel), ("data", "model"))

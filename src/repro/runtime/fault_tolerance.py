@@ -9,8 +9,8 @@ unit-testable with a fake clock (tests/test_fault_tolerance.py):
   ``factor`` x fleet median for ``patience`` consecutive steps are flagged
   (mitigation = exclude + re-mesh, or re-balance batch shares).
 - ``ElasticPlan``        : given surviving device count, derives the new mesh
-  (launch.mesh.make_elastic_mesh), the checkpoint step to resume from, and
-  the per-host data-shard reassignment.
+  shape (shrinking the data axis first), the checkpoint step to resume
+  from, and the per-host data-shard reassignment.
 - ``run_resilient``      : the training supervision loop — train step,
   async checkpoint every K steps, auto-resume on failure (simulated
   failures injectable for tests/examples).

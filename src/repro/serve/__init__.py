@@ -13,15 +13,23 @@ load-servable inference service:
   batcher + per-request energy metering (every response carries logits,
   its own :class:`~repro.study.artifacts.StatsRecord` row, and the
   energy/latency estimate priced via ``repro.study.price_record``);
+- ``repro.serve.persist`` — registry checkpoints: params through
+  ``repro.checkpoint``, AOT plans through ``jax.export``, content-hash
+  keys shared with the study cache (:func:`save_registry` /
+  :func:`load_registry`);
+- ``repro.serve.fleet`` — N replica processes serving one checkpointed
+  registry behind a shared compilation cache
+  (``python -m repro.serve.fleet --replicas N --cache-dir D``);
 - ``repro.serve.bench`` — closed/open-loop load generation
   (``python -m repro.serve.bench``).
 
-See ``docs/SERVING.md`` for architecture and policies. The older
-``repro.serving`` package is the template-era LM continuous-batching path
-and is unrelated to the SNN engine.
+See ``docs/SERVING.md`` for architecture, policies, and the cold-start
+path.
 """
 from .api import InferRequest, InferResponse, ServeError  # noqa: F401
 from .batching import DEFAULT_BUCKETS, BucketPolicy  # noqa: F401
+from .persist import (CheckpointError, CorruptCheckpointError,  # noqa: F401
+                      StaleCheckpointError, load_registry, save_registry)
 from .registry import ModelHandle, ModelRegistry  # noqa: F401
 from .runtime import ServeRuntime  # noqa: F401
 
@@ -30,4 +38,6 @@ __all__ = [
     "BucketPolicy", "DEFAULT_BUCKETS",
     "ModelHandle", "ModelRegistry",
     "ServeRuntime",
+    "CheckpointError", "StaleCheckpointError", "CorruptCheckpointError",
+    "save_registry", "load_registry",
 ]

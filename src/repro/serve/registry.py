@@ -68,6 +68,11 @@ class ModelHandle:
         # AOT plans bypass the jit cache, so the jit-cache counter the
         # audit harness uses for the engine cannot see them
         self.compile_count = 0
+        # study provenance: the convert-stage content key when this handle
+        # came through register_study (None for directly registered params);
+        # persisted into registry checkpoints (serve/persist.py) so a
+        # restored model keeps its link back to the study cache entry
+        self.source_key: str | None = None
 
     def set_mesh(self, mesh) -> None:
         """(Re)point this handle at a device mesh; drops compiled plans.
@@ -142,6 +147,25 @@ class ModelHandle:
 
     def cached_buckets(self) -> tuple:
         return tuple(self._plans)
+
+    def adopt_plan(self, bucket: int, plan) -> None:
+        """Install a restored executable for ``bucket`` (checkpoint path).
+
+        ``serve/persist.py`` deserializes ``jax.export`` plan blobs and
+        hands them here: the plan enters the same LRU the AOT path fills,
+        but does **not** bump ``compile_count`` — a restore is a cache hit
+        by construction, so the warmup recompilation guard keeps working
+        unchanged on a registry restored from disk (warmup-from-disk must
+        be all hits). ``plan`` takes ``(params, thresholds, images)``
+        exactly like a ``plan_for`` executable.
+        """
+        self._plans.pop(bucket, None)
+        self._plans[bucket] = plan
+        obs.counter("serve.plan_adopt")
+        while len(self._plans) > self.plan_cache_size:
+            evicted, _ = self._plans.popitem(last=False)
+            obs.event("serve.plan_evict", model=self.name, bucket=evicted)
+            obs.counter("serve.plan_evictions")
 
     def run_bucket(self, images, n_valid: int):
         """Execute one padded bucket; return the valid prefix (see engine
@@ -241,11 +265,13 @@ class ModelRegistry:
 
         trained = stages.train(spec, cache=cache)
         converted = stages.convert(spec, trained, cache=cache)
-        return self.register(
+        handle = self.register(
             name, converted.snn_params, converted.thresholds,
             spec.snn_config(), backend=spec.backend,
             vmem_resident=(spec.vmem_resident if vmem_resident is None
                            else vmem_resident))
+        handle.source_key = converted.key
+        return handle
 
     def get(self, name: str) -> ModelHandle:
         try:

@@ -17,9 +17,10 @@ from .report import Report, sweep_rows  # noqa: F401
 from .spec import (StudySpec, StudySpecError, UnknownBackendError,  # noqa: F401
                    UnknownDatasetError, UnknownInputModeError,
                    UnknownNeuronModeError)
-from .stages import (collect, convert, fit_cnn, from_params,  # noqa: F401
-                     price, price_record, reset_stage_counts, run,
-                     run_with_data, stage_counts, sweep, train, train_snn)
+from .stages import (collect, convert, export_artifact,  # noqa: F401
+                     fit_cnn, from_params, load_artifact, price,
+                     price_record, reset_stage_counts, run, run_with_data,
+                     stage_counts, sweep, train, train_snn)
 
 # the sweep *runner* module (python -m repro.study.sweep). Importing it
 # binds the package attribute ``sweep`` to the module — shadowing the stage

@@ -24,12 +24,17 @@ how tests pin the "pricing sweep runs inference exactly once" guarantee.
 from __future__ import annotations
 
 import collections
+import json
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from ..checkpoint.checkpoint import restore as ckpt_restore
+from ..checkpoint.checkpoint import save as ckpt_save
 from ..core import conversion, encoding, engine
 from ..core.cnn_baseline import cnn_costs, cnn_forward, make_train_step
 from ..core.energy import STATIC_POWER_W, cnn_energy, reprice
@@ -227,6 +232,80 @@ def convert(spec: StudySpec, trained: TrainArtifact | None = None, *,
 
     return cache.get_or_build("convert", key, build, tag=spec.dataset,
                               save=save, load=load)
+
+
+# ---------------------------------------------------------------------------
+# export — hand a converted/trained SNN to the serving layer as files
+# ---------------------------------------------------------------------------
+
+_EXPORT_SCHEMA = "snn-export-v1"
+_EXPORT_MANIFEST = "export.json"
+
+
+def export_artifact(artifact: ConvertArtifact | DirectTrainArtifact,
+                    root: str) -> str:
+    """Write a convert/train_snn artifact as a standalone checkpoint.
+
+    The bridge between the study cache (keyed, in-repo, re-buildable) and
+    deployment (``repro.serve.persist`` / plain file shipping): params and
+    thresholds land in a :mod:`repro.checkpoint` directory with per-leaf
+    digests, plus a manifest pinning the stage's content key so
+    :func:`load_artifact` can refuse a tampered or mismatched tree. Returns
+    the manifest path.
+    """
+    tree = {"snn_params": [dict(p) for p in artifact.snn_params],
+            "thresholds": [np.asarray(t) for t in artifact.thresholds]}
+    ckpt_save(root, 0, tree)
+    manifest = {
+        "schema": _EXPORT_SCHEMA,
+        "key": artifact.key,
+        "kind": type(artifact).__name__,
+        "content": content_key("snn-export-content", artifact.snn_params,
+                               [np.asarray(t) for t in artifact.thresholds]),
+        "params_tree": [sorted(p) for p in artifact.snn_params],
+        "n_thresholds": len(artifact.thresholds),
+    }
+    path = os.path.join(root, _EXPORT_MANIFEST)
+    fd, tmp = tempfile.mkstemp(dir=root, suffix=".json.tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def load_artifact(root: str) -> ConvertArtifact | DirectTrainArtifact:
+    """Restore an :func:`export_artifact` directory, verifying integrity.
+
+    Raises ``FileNotFoundError`` without a manifest, ``IOError`` on a
+    corrupted shard (the checkpoint layer's per-leaf digests), and
+    ``ValueError`` when the restored content no longer hashes to the
+    exported stage key (stale or tampered export).
+    """
+    path = os.path.join(root, _EXPORT_MANIFEST)
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no {_EXPORT_MANIFEST} under {root!r} — "
+                                "not an export_artifact directory")
+    with open(path) as f:
+        manifest = json.load(f)
+    if manifest.get("schema") != _EXPORT_SCHEMA:
+        raise ValueError(f"{path}: schema {manifest.get('schema')!r}, "
+                         f"expected {_EXPORT_SCHEMA!r}")
+    template = {"snn_params": [{k: 0 for k in layer}
+                               for layer in manifest["params_tree"]],
+                "thresholds": [0] * manifest["n_thresholds"]}
+    tree, _ = ckpt_restore(root, template)
+    cls = (DirectTrainArtifact if manifest["kind"] == "DirectTrainArtifact"
+           else ConvertArtifact)
+    art = cls(_params_to_jnp(tree["snn_params"]),
+              [jnp.asarray(t) for t in tree["thresholds"]], manifest["key"])
+    got = content_key("snn-export-content", art.snn_params,
+                      [np.asarray(t) for t in art.thresholds])
+    if got != manifest["content"]:
+        raise ValueError(
+            f"{root}: restored params hash to {got} but the manifest pins "
+            f"{manifest['content']} — export is stale or tampered; re-run "
+            "export_artifact")
+    return art
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Serving: the SNN serving runtime (``repro.serve``) + LM-template smoke.
+"""Serving: the SNN serving runtime (``repro.serve``).
 
 The structural guarantees pinned here:
 
@@ -12,9 +12,8 @@ The structural guarantees pinned here:
 3. **Batcher/registry policy** — bucket selection, model isolation within
    a batch, LRU bounds on models and compiled plans.
 
-The LM continuous-batching engine (``repro.serving.serve``) keeps one smoke
-test: it is the template-era path, unrelated to the SNN engine (see its
-module docstring), and only needs to stay importable and functional.
+Checkpoint/restore and cold-start guarantees live in
+``tests/test_coldstart.py``.
 """
 import jax
 import jax.numpy as jnp
@@ -389,25 +388,3 @@ def test_batches_never_mix_models(net):
     for name in ("qp", "dn"):
         rids = [r.rid for r in responses if r.model == name]
         assert rids == sorted(rids)
-
-
-# ---------------------------------------------------------------------------
-# LM template engine: minimal smoke (template-era path, see module docstring)
-# ---------------------------------------------------------------------------
-
-def test_lm_continuous_batching_smoke():
-    from repro.models import model as M
-    from repro.serving.serve import Request, ServeEngine
-
-    from _smoke_archs import SMOKES
-
-    cfg = SMOKES["dense-tied"]
-    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, slots=2, max_seq=32)
-    reqs = [Request(rid=i, prompt=[3, 1, 4, 1 + i], max_tokens=3)
-            for i in range(3)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run_to_completion()
-    assert all(r.done and len(r.out) == 3 for r in reqs)
-    assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
